@@ -1,0 +1,93 @@
+"""Shared benchmark harness: tiny-but-faithful SFPL/SFLv2/FL experiment
+setup (synthetic CIFAR-like data; paper hyperparameters scaled to CPU)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import engine as E
+from repro.core.evaluate import (
+    evaluate_split_iid, evaluate_split_noniid, evaluate_fl)
+from repro.data import (
+    make_synthetic_cifar, partition_positive_labels, partition_iid)
+from repro.models import resnet as R
+from repro.optim import sgd_momentum, multistep_lr
+
+
+def setup(*, num_classes=4, depth=8, width=8, hw=16, per_class=48,
+          test_per_class=24, seed=0):
+    key = jax.random.PRNGKey(seed)
+    cfg = R.ResNetConfig(depth=depth, num_classes=num_classes, width=width)
+    tx, ty, ex, ey = make_synthetic_cifar(
+        key, num_classes=num_classes, train_per_class=per_class,
+        test_per_class=test_per_class, hw=hw)
+    split = E.make_resnet_split(cfg)
+    return dict(cfg=cfg, split=split, train=(tx, ty), test=(ex, ey),
+                V=num_classes, key=key)
+
+
+def make_opt(lr=0.05, epochs=12, steps_per_epoch=6):
+    # paper: SGD momentum 0.9, wd 5e-4, MultiStepLR(gamma) at 60/120/160 of
+    # 175 epochs -> same fractions of our budget
+    total = epochs * steps_per_epoch
+    ms = [int(total * f) for f in (60 / 175, 120 / 175, 160 / 175)]
+    return sgd_momentum(multistep_lr(lr, ms, 0.1), momentum=0.9,
+                        weight_decay=5e-4)
+
+
+def run_scheme(env, scheme, *, epochs=6, batch_size=8, bn_mode="cmsd",
+               training_iid=False, seed=1):
+    """Returns (state, report_fn, seconds_per_epoch)."""
+    V, cfg, split = env["V"], env["cfg"], env["split"]
+    tx, ty = env["train"]
+    if training_iid:
+        data = partition_iid(jax.random.PRNGKey(seed), tx, ty, V)
+    else:
+        data = partition_positive_labels(tx, ty, V)
+    n_local = data["x"].shape[1]
+    steps_pe = n_local // batch_size
+    opt = make_opt(epochs=epochs, steps_per_epoch=steps_pe)
+
+    key = jax.random.PRNGKey(seed)
+    if scheme == "fl":
+        st = E.init_fl_state(key, lambda k: R.init(k, cfg), V, opt)
+        step = jax.jit(lambda k, s: E.fl_epoch(
+            k, s, data, split, opt, num_clients=V, batch_size=batch_size))
+    elif scheme == "sflv2":
+        st = E.init_dcml_state(key, lambda k: R.init(k, cfg), V, opt, opt)
+        step = jax.jit(lambda k, s: E.sflv2_epoch(
+            k, s, data, split, opt, opt, num_clients=V,
+            batch_size=batch_size))
+    elif scheme == "sfpl":
+        st = E.init_dcml_state(key, lambda k: R.init(k, cfg), V, opt, opt)
+        step = jax.jit(lambda k, s: E.sfpl_epoch(
+            k, s, data, split, opt, opt, num_clients=V,
+            batch_size=batch_size, bn_mode=bn_mode))
+    else:
+        raise ValueError(scheme)
+
+    # warmup/compile
+    st_w, _ = step(key, st)
+    t0 = time.time()
+    losses = None
+    for _ in range(epochs):
+        key, ke = jax.random.split(key)
+        st, losses = step(ke, st)
+    dt = (time.time() - t0) / epochs
+
+    ex, ey = env["test"]
+    rmsd = bn_mode == "rmsd"
+
+    def report(testing_iid=True):
+        if scheme == "fl":
+            return evaluate_fl(st, split, ex, ey, V, rmsd=rmsd)
+        if testing_iid:
+            return evaluate_split_iid(st, split, ex, ey, V, rmsd=rmsd,
+                                      batch=32)
+        return evaluate_split_noniid(st, split, ex, ey, V, rmsd=rmsd,
+                                     batch=24)
+
+    return st, report, dt, (float(losses.mean()) if losses is not None
+                            else None)

@@ -1,0 +1,86 @@
+"""Generate the EXPERIMENTS.md §Dry-run and §Roofline tables from the
+sweep JSONs (dryrun_single.json, dryrun_multi.json, roofline_single.json).
+
+Run:  PYTHONPATH=src:. python -m benchmarks.make_tables > tables.md
+"""
+from __future__ import annotations
+
+import json
+
+
+def gib(x):
+    return (x or 0) / 2 ** 30
+
+
+def dryrun_table(single, multi):
+    by_key = {(r.get("arch"), r.get("shape")): r for r in multi}
+    print("| arch | shape | mesh 16x16: GiB/dev | flops/dev | coll GiB/dev "
+          "| mesh 2x16x16: GiB/dev | coll GiB/dev | status |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in single:
+        key = (r.get("arch"), r.get("shape"))
+        m = by_key.get(key, {})
+        if "skipped" in r:
+            print(f"| {key[0]} | {key[1]} | — | — | — | — | — | "
+                  f"SKIP ({r['skipped'][:48]}…) |")
+            continue
+        if "error" in r:
+            print(f"| {key[0]} | {key[1]} | — | — | — | — | — | "
+                  f"ERROR {r['error'][:40]} |")
+            continue
+        mem = r["memory"]
+        per = gib((mem["argument_bytes"] or 0) + (mem["temp_bytes"] or 0)
+                  - (mem.get("alias_bytes") or 0))
+        coll = gib(sum(v["traffic_bytes"]
+                       for v in r["collectives"].values()))
+        if m and "memory" not in m:
+            m = {}
+        if m:
+            mm = m["memory"]
+            per2 = gib((mm["argument_bytes"] or 0) + (mm["temp_bytes"] or 0)
+                       - (mm.get("alias_bytes") or 0))
+            coll2 = gib(sum(v["traffic_bytes"]
+                            for v in m["collectives"].values()))
+            m_s = f"{per2:.2f} | {coll2:.2f}"
+        else:
+            m_s = "— | —"
+        print(f"| {key[0]} | {key[1]} | {per:.2f} | "
+              f"{r['cost']['flops'] or 0:.2e} | {coll:.2f} | {m_s} | "
+              f"compiled ✓✓ |")
+
+
+def roofline_table(roof):
+    print()
+    print("| arch | shape | compute s | memory s | collective s | dominant "
+          "| MODEL/HLO flops | note |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in roof:
+        if "skipped" in r:
+            print(f"| {r['arch']} | {r['shape']} | — | — | — | — | — | "
+                  f"skipped |")
+            continue
+        if "error" in r:
+            print(f"| {r['arch']} | {r['shape']} | — | — | — | — | — | "
+                  f"ERROR |")
+            continue
+        print(f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3g} | "
+              f"{r['memory_s']:.3g} | {r['collective_s']:.3g} | "
+              f"**{r['dominant']}** | {r['useful_ratio']:.2f} | "
+              f"{r['recommendation'][:46]}… |")
+
+
+def main():
+    single = json.load(open("dryrun_single.json"))
+    multi = json.load(open("dryrun_multi.json"))
+    print("### Dry-run matrix (memory from the scanned deployment config)\n")
+    dryrun_table(single, multi)
+    try:
+        roof = json.load(open("roofline_single.json"))
+        print("\n### Roofline (single-pod, 256 chips; per train/serve step)\n")
+        roofline_table(roof)
+    except FileNotFoundError:
+        print("\n(roofline_single.json not ready)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""Paper-scale faithful run (CPU-feasible slice of Table V):
+
+10 clients == 10 classes (CIFAR-10 cardinality), 32x32x3 synthetic images,
+ResNet-8 width 16 (exact Table-IV client: 464 params / 475.136K flops),
+minibatch 4 (paper's setting), SGD momentum 0.9 / wd 5e-4 / MultiStepLR.
+
+Writes paper_scale_results.json for EXPERIMENTS.md §Paper-claims.
+
+Run:  PYTHONPATH=src:. python -m benchmarks.paper_scale [--epochs 20]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+
+from benchmarks.common import setup, run_scheme
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--epochs", type=int, default=18)
+    ap.add_argument("--per-class", type=int, default=80)
+    ap.add_argument("--depth", type=int, default=8)
+    args = ap.parse_args()
+
+    env = setup(num_classes=10, depth=args.depth, width=16, hw=32,
+                per_class=args.per_class, test_per_class=40)
+    out = {"config": {"classes": 10, "depth": args.depth, "width": 16,
+                      "hw": 32, "per_class": args.per_class,
+                      "epochs": args.epochs, "batch": 4}}
+    t0 = time.time()
+
+    _, rep, dt, _ = run_scheme(env, "sflv2", epochs=args.epochs,
+                               batch_size=4, bn_mode="rmsd")
+    out["sflv2_rmsd_testIID"] = rep(testing_iid=True)
+    out["sflv2_epoch_s"] = dt
+    print("sflv2:", out["sflv2_rmsd_testIID"]["accuracy"], flush=True)
+
+    for mode in ("cmsd", "rmsd"):
+        _, rep, dt, _ = run_scheme(env, "sfpl", epochs=args.epochs,
+                                   batch_size=4, bn_mode=mode)
+        out[f"sfpl_{mode}_test_nonIID"] = rep(testing_iid=False)
+        out[f"sfpl_{mode}_test_IID"] = rep(testing_iid=True)
+        out[f"sfpl_{mode}_epoch_s"] = dt
+        print(f"sfpl {mode}: nonIID",
+              out[f"sfpl_{mode}_test_nonIID"]["accuracy"],
+              "IID", out[f"sfpl_{mode}_test_IID"]["accuracy"], flush=True)
+
+    _, rep, dt, _ = run_scheme(env, "fl", epochs=args.epochs, batch_size=4,
+                               bn_mode="rmsd")
+    out["fl_testIID"] = rep()
+    print("fl:", out["fl_testIID"]["accuracy"], flush=True)
+
+    acc_sfpl = out["sfpl_cmsd_test_nonIID"]["accuracy"]
+    acc_sfl = out["sflv2_rmsd_testIID"]["accuracy"]
+    out["improvement_factor"] = acc_sfpl / max(acc_sfl, 1e-9)
+    out["wall_s"] = time.time() - t0
+    for k, v in list(out.items()):
+        if isinstance(v, dict) and "per_class_acc" in v:
+            v["per_class_acc"] = [round(float(a), 3)
+                                  for a in v["per_class_acc"]]
+    with open("paper_scale_results.json", "w") as f:
+        json.dump(out, f, indent=1, default=float)
+    print(f"\nimprovement factor {out['improvement_factor']:.2f}x "
+          f"(total {out['wall_s']:.0f}s)")
+
+
+if __name__ == "__main__":
+    main()

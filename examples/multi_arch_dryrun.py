@@ -1,0 +1,28 @@
+"""Lower + compile a few (architecture x input-shape) pairs against the
+production 16x16 mesh and print their memory/cost analysis — a miniature of
+launch/dryrun.py --all.
+
+Run:  PYTHONPATH=src python examples/multi_arch_dryrun.py
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+from repro.launch.dryrun import lower_one, summarize  # noqa: E402
+
+
+def main():
+    pairs = [
+        ("qwen3-8b", "train_4k"),
+        ("recurrentgemma-9b", "long_500k"),
+        ("llama4-scout-17b-a16e", "decode_32k"),
+    ]
+    for arch, shape in pairs:
+        res = lower_one(arch, shape)
+        print(summarize(res))
+        for op, d in res["collectives"].items():
+            print(f"    {op:20s} count={d['count']:4d} "
+                  f"traffic={d['traffic_bytes'] / 2 ** 30:.3f} GiB/dev")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Quickstart: one SFPL round end-to-end in ~a minute on CPU.
+
+Ten IoT clients, each holding ONLY ONE class (positive labels); a ResNet-8
+split after its first conv block; the global collector shuffles the pooled
+smashed data before every server-side update; ClientFedServer averages the
+client models excluding BatchNorm.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+from repro.core import engine as E
+from repro.core.evaluate import evaluate_split_noniid
+from repro.data import make_synthetic_cifar, partition_positive_labels
+from repro.models import resnet as R
+from repro.optim import sgd_momentum
+
+
+def main():
+    V = 4                       # classes == clients
+    cfg = R.ResNetConfig(depth=8, num_classes=V, width=8)
+    key = jax.random.PRNGKey(0)
+
+    tx, ty, ex, ey = make_synthetic_cifar(
+        key, num_classes=V, train_per_class=48, test_per_class=24, hw=16)
+    data = partition_positive_labels(tx, ty, V)
+    print(f"{V} clients, each holding exactly one class: "
+          f"{data['x'].shape[1]} samples each")
+
+    split = E.make_resnet_split(cfg)
+    opt = sgd_momentum(0.05, momentum=0.9, weight_decay=5e-4)
+    st = E.init_dcml_state(key, lambda k: R.init(k, cfg), V, opt, opt)
+
+    epoch = jax.jit(lambda k, s: E.sfpl_epoch(
+        k, s, data, split, opt, opt, num_clients=V, batch_size=8,
+        bn_mode="cmsd"))
+
+    for ep in range(6):
+        key, ke = jax.random.split(key)
+        st, losses = epoch(ke, st)
+        print(f"epoch {ep}: mean server loss {float(losses.mean()):.4f}")
+
+    rep = evaluate_split_noniid(st, split, ex, ey, V, rmsd=False)
+    print(f"\nSFPL non-IID test: accuracy {rep['accuracy']:.1f}% "
+          f"(chance = {100 / V:.0f}%), precision@1 {rep['precision@1']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

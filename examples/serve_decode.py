@@ -1,0 +1,16 @@
+"""Batched serving example: prefill + incremental decode with KV cache /
+recurrent state across three architecture families (dense GQA, MoE with
+sliding-window ring cache, and an attention-free recurrent model).
+
+Run:  PYTHONPATH=src python examples/serve_decode.py
+"""
+from repro.launch.serve import serve
+
+
+def main():
+    for arch in ("qwen3-8b", "llama4-scout-17b-a16e", "xlstm-1.3b"):
+        serve(arch, batch=4, prompt_len=12, gen=12, temperature=0.8)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""End-to-end LM training driver with SFPL as a first-class feature:
+a ~100M-parameter qwen3-family model trained for a few hundred steps on the
+synthetic Markov stream, with the global-collector shuffle inside the jitted
+train step (--sfpl) — the production integration of the paper's technique.
+
+Run:  PYTHONPATH=src python examples/train_lm_sfpl.py --steps 300 --sfpl
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch
+from repro.data.tokens import synthetic_token_stream
+from repro.launch.steps import make_train_step
+from repro.models.common import count_params
+from repro.optim import adamw, cosine_lr
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--sfpl", action="store_true")
+    ap.add_argument("--lr", type=float, default=1e-3)
+    args = ap.parse_args()
+
+    spec = get_arch("qwen3-8b")
+    # ~100M-parameter member of the qwen3 family
+    cfg = spec.make_config(num_layers=8, d_model=512, num_heads=8,
+                           num_kv_heads=4, head_dim=64, d_ff=1536,
+                           vocab_size=32000, remat=False)
+    params = spec.model.init(jax.random.PRNGKey(0), cfg)
+    print(f"model: {count_params(params) / 1e6:.1f}M params, "
+          f"sfpl={'ON' if args.sfpl else 'off'}")
+
+    opt = adamw(cosine_lr(args.lr, args.steps, warmup=20))
+    opt_state = opt.init(params)
+    step_fn = jax.jit(make_train_step(spec, cfg, opt, sfpl=args.sfpl))
+
+    key = jax.random.PRNGKey(1)
+    step = jnp.zeros((), jnp.int32)
+    t0 = time.time()
+    first = None
+    for i in range(args.steps):
+        key, kd, kp = jax.random.split(key, 3)
+        toks, labels = synthetic_token_stream(
+            kd, batch=args.batch, seq_len=args.seq, vocab=cfg.vocab_size)
+        batch = {"tokens": toks, "labels": labels}
+        if args.sfpl:
+            batch["perm"] = jax.random.permutation(kp, args.batch)
+        params, opt_state, step, loss = step_fn(params, opt_state, step,
+                                                batch)
+        if first is None:
+            first = float(loss)
+        if i % 20 == 0 or i == args.steps - 1:
+            tok_s = args.batch * args.seq * (i + 1) / (time.time() - t0)
+            print(f"step {i:4d}  loss {float(loss):.4f}  "
+                  f"({tok_s:.0f} tok/s)", flush=True)
+    print(f"\nloss {first:.3f} -> {float(loss):.3f} over {args.steps} steps")
+
+
+if __name__ == "__main__":
+    main()

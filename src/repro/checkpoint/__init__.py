@@ -1,0 +1,1 @@
+from repro.checkpoint.npz import save_checkpoint, restore_checkpoint

@@ -1,0 +1,51 @@
+"""Pytree checkpointing to .npz (no orbax in container).
+
+Leaves are flattened to ``path -> array`` with '/'-joined dict keys; restore
+rebuilds into the reference tree's structure (shape/dtype verified).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree):
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        arr = np.asarray(leaf)
+        if arr.dtype == jnp.bfloat16:   # npz can't serialize ml_dtypes;
+            arr = arr.astype(np.float32)  # exact widening, re-cast on load
+        flat[key] = arr
+    return flat
+
+
+def save_checkpoint(path, tree, *, step=None):
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    flat = _flatten(tree)
+    if step is not None:
+        flat["__step__"] = np.asarray(step)
+    tmp = path + ".tmp"
+    np.savez(tmp, **flat)
+    os.replace(tmp + ".npz" if os.path.exists(tmp + ".npz") else tmp, path)
+
+
+def restore_checkpoint(path, ref_tree):
+    """Restore into ``ref_tree``'s structure. Returns (tree, step|None)."""
+    with np.load(path) as data:
+        step = data["__step__"] if "__step__" in data.files else None
+        leaves_ref, treedef = jax.tree_util.tree_flatten_with_path(ref_tree)
+        out = []
+        for pathk, ref in leaves_ref:
+            key = "/".join(
+                str(getattr(k, "key", getattr(k, "idx", k))) for k in pathk)
+            arr = data[key]
+            assert arr.shape == ref.shape, (key, arr.shape, ref.shape)
+            out.append(jnp.asarray(arr, dtype=ref.dtype))
+        tree = jax.tree_util.tree_unflatten(
+            jax.tree_util.tree_structure(ref_tree), out)
+    return tree, (int(step) if step is not None else None)

@@ -1,0 +1,3 @@
+from repro.configs.registry import (
+    ArchSpec, get_arch, list_archs, input_specs)
+from repro.configs.shapes import SHAPES, InputShape

@@ -1,0 +1,124 @@
+"""Architecture registry: ``--arch <id>`` lookup + per-shape input specs.
+
+Every assigned architecture registers an ``ArchSpec`` here. ``input_specs``
+returns jax.ShapeDtypeStruct stand-ins (weak-type-correct, shardable, no
+device allocation) for the step function selected by the input shape's kind.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.shapes import SHAPES, InputShape
+
+_REGISTRY = {}
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchSpec:
+    arch_id: str
+    family: str                      # transformer | xlstm | rglru | whisper
+    citation: str
+    make_config: Callable            # (**overrides) -> full-size config
+    make_smoke_config: Callable      # () -> reduced config
+    supports_long_context: bool = False   # may run long_500k
+    notes: str = ""
+
+    @property
+    def model(self):
+        mod = {"transformer": "repro.models.transformer",
+               "xlstm": "repro.models.xlstm",
+               "rglru": "repro.models.rglru",
+               "whisper": "repro.models.whisper"}[self.family]
+        return importlib.import_module(mod)
+
+    def skip_reason(self, shape: InputShape) -> Optional[str]:
+        if shape.name == "long_500k" and not self.supports_long_context:
+            return ("pure global-attention architecture: 500k-token decode "
+                    "requires a sub-quadratic / windowed variant "
+                    "(DESIGN.md §5)")
+        return None
+
+
+def register(spec: ArchSpec):
+    _REGISTRY[spec.arch_id] = spec
+    return spec
+
+
+def get_arch(arch_id: str) -> ArchSpec:
+    _ensure_loaded()
+    return _REGISTRY[arch_id]
+
+
+def list_archs():
+    _ensure_loaded()
+    return sorted(_REGISTRY)
+
+
+_ARCH_MODULES = [
+    "minitron_8b", "qwen3_8b", "qwen2_vl_7b", "phi3_medium_14b", "gemma_7b",
+    "xlstm_1_3b", "whisper_large_v3", "llama4_maverick_400b_a17b",
+    "recurrentgemma_9b", "llama4_scout_17b_a16e",
+]
+_loaded = False
+
+
+def _ensure_loaded():
+    global _loaded
+    if not _loaded:
+        for m in _ARCH_MODULES:
+            importlib.import_module(f"repro.configs.{m}")
+        _loaded = True
+
+
+# --------------------------------------------------------------------------
+# input specs
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(spec: ArchSpec, cfg, shape: InputShape, *,
+                cache_dtype=jnp.bfloat16):
+    """ShapeDtypeStruct inputs for (arch, shape). Returns (kind, specs)."""
+    B, S = shape.global_batch, shape.seq_len
+    fam = spec.family
+
+    if shape.kind in ("train", "prefill"):
+        if fam == "whisper":
+            # seq_len = encoder frames (stub frontend embeddings);
+            # decoder length = whisper's 448-token context
+            st = min(448, S)
+            specs = {"frame_embeds": _sds((B, S, cfg.d_model), jnp.bfloat16),
+                     "tokens": _sds((B, st), jnp.int32)}
+            if shape.kind == "train":
+                specs["labels"] = _sds((B, st), jnp.int32)
+            return specs
+        specs = {"tokens": _sds((B, S), jnp.int32)}
+        if shape.kind == "train":
+            specs["labels"] = _sds((B, S), jnp.int32)
+        if fam == "transformer" and getattr(cfg, "vision_tokens", 0):
+            specs["vision_embeds"] = _sds(
+                (B, cfg.vision_tokens, cfg.d_model), jnp.bfloat16)
+        return specs
+
+    # decode: one new token + carried state of size seq_len
+    specs = {"tokens": _sds((B, 1), jnp.int32)}
+    if fam == "whisper":
+        state = jax.eval_shape(
+            lambda: spec.model.init_decode_state(
+                cfg, B, S, dtype=cache_dtype,
+                enc_frames=cfg.max_source_positions))
+    elif fam == "xlstm":
+        state = jax.eval_shape(
+            lambda: spec.model.init_decode_state(cfg, B))
+    else:
+        state = jax.eval_shape(
+            lambda: spec.model.init_decode_state(cfg, B, S,
+                                                 dtype=cache_dtype))
+    specs["state"] = state
+    return specs

@@ -1,0 +1,2 @@
+"""SFPL core: the paper's contribution as composable JAX modules."""
+from repro.core import collector, bn_policy, engine, evaluate, split_lm

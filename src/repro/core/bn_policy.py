@@ -1,0 +1,62 @@
+"""Batch-normalization aggregation policies (the second half of SFPL).
+
+Paper §V-C / Tables VI-VIII: aggregating BN parameters/statistics across
+clients with non-IID data hurts. SFPL's ClientFedServer averages the
+client-side model *excluding BatchNorm layers* (each client keeps its local
+BN); at inference either the aggregated running statistics (RMSD) or the
+test batch's own statistics (CMSD) are used.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _path_names(path):
+    names = []
+    for k in path:
+        if hasattr(k, "key"):
+            names.append(str(k.key))
+        elif hasattr(k, "name"):
+            names.append(str(k.name))
+        else:
+            names.append(str(k))
+    return names
+
+
+def is_bn_path(path) -> bool:
+    """True if the param path belongs to a BatchNorm layer (keys 'bn*')."""
+    return any(n.startswith("bn") for n in _path_names(path))
+
+
+def fedavg(stacked_params, *, weights=None, exclude_bn=False):
+    """FedAvg over the leading client axis of every leaf.
+
+    ``exclude_bn=True`` (SFPL): BN leaves are returned *unchanged* (still
+    per-client, leading axis N) while all other leaves are averaged and
+    broadcast back to every client — Algorithm 2's ClientFedServer.
+    Returns a tree with the same (N, ...) leaf shapes.
+    """
+    def agg(path, x):
+        if exclude_bn and is_bn_path(path):
+            return x
+        if weights is None:
+            avg = jnp.mean(x, axis=0)
+        else:
+            w = weights / jnp.sum(weights)
+            avg = jnp.tensordot(w, x, axes=1)
+        return jnp.broadcast_to(avg[None], x.shape)
+
+    return jax.tree_util.tree_map_with_path(agg, stacked_params)
+
+
+def aggregate_bn_state(stacked_state, *, aggregate=False):
+    """BN running statistics. SFLv2 (RMSD) aggregates them like params;
+    SFPL keeps them local. Returns (N, ...) leaves either way."""
+    if not aggregate:
+        return stacked_state
+
+    def agg(x):
+        return jnp.broadcast_to(jnp.mean(x, axis=0)[None], x.shape)
+
+    return jax.tree_util.tree_map(agg, stacked_state)

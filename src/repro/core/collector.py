@@ -1,0 +1,123 @@
+"""SFPL's global collector function (paper Algorithm 1).
+
+The collector accumulates smashed data + labels from all clients, applies a
+random shuffle before server-side training, and de-shuffles the returned
+activation gradients so each slice is routed back to its source client.
+
+Three implementations with identical semantics:
+  * ``shuffle`` / ``deshuffle``           — jnp take (simulation default)
+  * ``shuffle(..., use_kernel=True)``     — Pallas gather kernel
+  * ``distributed_shuffle``               — mesh-aware: the pooled batch axis
+    is sharded over ("pod","data"); a global permutation gather compiles to
+    all-to-all / collective-permute on the data axis (the paper's
+    "collect from all clients then scatter back" — without ever
+    materializing the pool on one device).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def make_permutation(key, n):
+    return jax.random.permutation(key, n)
+
+
+def inverse_permutation(perm):
+    return jnp.argsort(perm)
+
+
+def _permute_leaf(x, perm, use_kernel, interpret):
+    if use_kernel:
+        from repro.kernels.collector_permute.ops import collector_permute
+        return collector_permute(x, perm, interpret=interpret)
+    return jnp.take(x, perm, axis=0)
+
+
+def shuffle(tree, perm, *, use_kernel=False, interpret=True):
+    """Apply ``perm`` along axis 0 of every leaf (smashed data + labels)."""
+    return jax.tree_util.tree_map(
+        lambda x: _permute_leaf(x, perm, use_kernel, interpret), tree)
+
+
+def deshuffle(tree, perm, *, use_kernel=False, interpret=True):
+    """Inverse of ``shuffle`` — routes gradients back to source clients."""
+    inv = inverse_permutation(perm)
+    return jax.tree_util.tree_map(
+        lambda x: _permute_leaf(x, inv, use_kernel, interpret), tree)
+
+
+def collect(per_client_tree):
+    """Stack per-client tensors (N, B, ...) into the pooled stack (N*B, ...).
+
+    Mirrors the paper's ActivationStack/LabelStack keyed by client id: row
+    ``k * B + j`` is sample j of client k, so ``uncollect`` can route
+    results back deterministically.
+    """
+    return jax.tree_util.tree_map(
+        lambda x: x.reshape((-1,) + x.shape[2:]), per_client_tree)
+
+
+def uncollect(pooled_tree, num_clients):
+    """Inverse of ``collect``: (N*B, ...) -> (N, B, ...)."""
+    return jax.tree_util.tree_map(
+        lambda x: x.reshape((num_clients, -1) + x.shape[1:]), pooled_tree)
+
+
+def distributed_shuffle(x, perm):
+    """Mesh-aware collector: ``x`` is the pooled global batch whose leading
+    axis is sharded over ("pod","data")). A gather by a global permutation is
+    SPMD-partitioned by XLA into all-to-all / collective-permute exchanges —
+    the TPU-native form of the paper's collect-shuffle-scatter.
+
+    Differentiable: the VJP of the gather is the de-shuffling scatter, so the
+    returned-gradient routing of Algorithm 1 falls out of autodiff.
+    """
+    return jnp.take(x, perm, axis=0)
+
+
+class GlobalCollector:
+    """Stateful convenience wrapper for the simulation engine.
+
+    ``alpha`` mirrors the paper's accumulation threshold (the collector waits
+    for ``alpha * N`` client batches before shuffling). In the synchronous
+    simulation every client contributes each round, so alpha scales how many
+    pooled batches form one shuffle unit.
+    """
+
+    def __init__(self, num_clients, *, alpha=1.0, use_kernel=False):
+        self.num_clients = num_clients
+        self.alpha = alpha
+        self.use_kernel = use_kernel
+
+    def make_pool_perm(self, key, n):
+        """Permutation honouring the paper's accumulation threshold: the
+        collector flushes every ceil(alpha*N) client batches, so rows are
+        shuffled within contiguous flush groups (alpha=1 -> one global
+        shuffle; alpha=0.5 with N=10 -> two independent 5-client pools)."""
+        N = self.num_clients
+        flush_clients = max(1, min(N, round(self.alpha * N)))
+        num_flushes = -(-N // flush_clients)
+        if num_flushes <= 1:
+            return make_permutation(key, n)
+        per_client = n // N
+        parts = []
+        start = 0
+        for f in range(num_flushes):
+            c = min(flush_clients, N - f * flush_clients)
+            size = c * per_client
+            sub = make_permutation(jax.random.fold_in(key, f), size)
+            parts.append(sub + start)
+            start += size
+        return jnp.concatenate(parts)
+
+    def shuffle_pool(self, key, per_client_acts, per_client_labels):
+        pooled = collect({"a": per_client_acts, "y": per_client_labels})
+        n = pooled["a"].shape[0]
+        perm = self.make_pool_perm(key, n)
+        shuffled = shuffle(pooled, perm, use_kernel=self.use_kernel)
+        return shuffled["a"], shuffled["y"], perm
+
+    def deshuffle_grads(self, grads_pool, perm):
+        d = deshuffle({"g": grads_pool}, perm, use_kernel=self.use_kernel)
+        return uncollect(d, self.num_clients)["g"]

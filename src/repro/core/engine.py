@@ -1,0 +1,264 @@
+"""Round engines for the three DCML schemes: SFPL (ours/paper), SFLv2, FL.
+
+Simulation semantics (single host, jit-compiled):
+  * clients are a stacked leading axis N on the client-side param/state trees
+  * SFPL: per local-batch step, all clients forward in parallel (vmap), the
+    GlobalCollector pools + shuffles smashed data, ONE server-side update
+    runs on the pooled shuffled stack, per-sample activation gradients are
+    de-shuffled and routed back, clients update locally (vmap). At epoch end
+    ClientFedServer averages client models EXCLUDING BatchNorm.
+  * SFLv2: clients are visited sequentially in random order; the single
+    server-side model trains on each client's (single-class) stream in turn
+    — this sequential structure is the catastrophic-forgetting mechanism
+    under study and must not be parallelized. Epoch end: FedAvg including BN
+    (paper's RMSD setup).
+  * FL: every client trains the full model locally; FedAvg everything.
+
+The engine is generic over a ``SplitModel`` (client_fwd / server_loss /
+full_loss closures) so the same machinery drives ResNets (paper) and the
+cut-transformer LM variants.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import collector as C
+from repro.core.bn_policy import fedavg, aggregate_bn_state
+from repro.models.common import softmax_cross_entropy
+
+
+@dataclasses.dataclass(frozen=True)
+class SplitModel:
+    # (cparams, cstate, x, training, rmsd) -> (smashed, new_cstate)
+    client_fwd: Callable
+    # (sparams, sstate, A, y, training, rmsd) -> (loss, (new_sstate, logits))
+    server_loss: Callable
+    # (params, state, x, y, training, rmsd) -> (loss, (new_state, logits))
+    full_loss: Callable
+
+
+def make_resnet_split(cfg):
+    """SplitModel closures for the paper's ResNet-8/32/56."""
+    from repro.models import resnet as R
+
+    def client_fwd(cp, cs, x, training=True, rmsd=None):
+        return R.client_apply(cp, cs, x, training=training, rmsd=rmsd)
+
+    def server_loss(sp, ss, a, y, training=True, rmsd=None):
+        logits, nss = R.server_apply(sp, ss, a, cfg, training=training,
+                                     rmsd=rmsd)
+        return softmax_cross_entropy(logits, y), (nss, logits)
+
+    def full_loss(p, s, x, y, training=True, rmsd=None):
+        logits, ns = R.apply(p, s, x, cfg, training=training, rmsd=rmsd)
+        return softmax_cross_entropy(logits, y), (ns, logits)
+
+    return SplitModel(client_fwd, server_loss, full_loss)
+
+
+# --------------------------------------------------------------------------
+# state containers
+
+def init_dcml_state(key, init_fn, num_clients, opt_client, opt_server):
+    """init_fn(key) -> ({"client":..., "server":...} params, state)."""
+    params, state = init_fn(key)
+    rep = lambda t: jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a[None], (num_clients,) + a.shape).copy(),
+        t)
+    return {
+        "cp": rep(params["client"]),
+        "cbn": rep(state["client"]),
+        "sp": params["server"],
+        "sbn": state["server"],
+        "copt": rep(opt_client.init(params["client"])),
+        "sopt": opt_server.init(params["server"]),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+# --------------------------------------------------------------------------
+# SFPL epoch (Algorithm 1 + 2)
+
+def sfpl_epoch(key, st, data, split: SplitModel, opt_c, opt_s, *,
+               num_clients, batch_size, bn_mode="cmsd", alpha=1.0):
+    """data: {"x": (N, n, ...), "y": (N, n)}. One epoch = scan over the
+    n // batch_size local batches.
+
+    ``bn_mode`` selects the paper's two SFPL aggregation variants:
+      * "cmsd" — ClientFedServer EXCLUDES BatchNorm (params + stats stay
+        local); inference uses current-batch statistics. Wins for non-IID
+        testing (Table VIII).
+      * "rmsd" — BatchNorm params and running stats ARE aggregated;
+        inference uses the aggregated running statistics. Wins for IID
+        testing (Tables VI, VII).
+    """
+    n_local = data["x"].shape[1]
+    steps = n_local // batch_size
+    coll = C.GlobalCollector(num_clients, alpha=alpha)
+
+    def one_step(carry, idx):
+        st, key = carry
+        key, kperm = jax.random.split(key)
+        xb = jax.lax.dynamic_slice_in_dim(data["x"], idx * batch_size,
+                                          batch_size, axis=1)
+        yb = jax.lax.dynamic_slice_in_dim(data["y"], idx * batch_size,
+                                          batch_size, axis=1)
+
+        # 1. client forward (parallel across clients)
+        A, ncbn = jax.vmap(
+            lambda cp, cs, x: split.client_fwd(cp, cs, x, True, None)
+        )(st["cp"], st["cbn"], xb)
+
+        # 2. global collector: pool + shuffle
+        a_shuf, y_shuf, perm = coll.shuffle_pool(kperm, A, yb)
+
+        # 3. one server-side update on the shuffled stack; dA per sample
+        def srv_loss(sp, a):
+            loss, (nss, _) = split.server_loss(sp, st["sbn"], a, y_shuf,
+                                               True, None)
+            return loss, nss
+        (loss, nsbn), (g_sp, g_a) = jax.value_and_grad(
+            srv_loss, argnums=(0, 1), has_aux=True)(st["sp"], a_shuf)
+        sp_new, sopt_new = opt_s.update(g_sp, st["sopt"], st["sp"],
+                                        st["step"])
+
+        # 4. de-shuffle dA and run client backprop locally
+        dA = coll.deshuffle_grads(g_a, perm)
+
+        def client_upd(cp, cbn, copt, x, da):
+            def f(cp_):
+                a, ncs = split.client_fwd(cp_, cbn, x, True, None)
+                return a, ncs
+            _, vjp, ncs = jax.vjp(f, cp, has_aux=True)
+            g_cp = vjp(da)[0]
+            cp_new, copt_new = opt_c.update(g_cp, copt, cp, st["step"])
+            return cp_new, copt_new, ncs
+
+        cp_new, copt_new, ncbn2 = jax.vmap(client_upd)(
+            st["cp"], ncbn, st["copt"], xb, dA)
+
+        st = dict(st, cp=cp_new, cbn=ncbn2, sp=sp_new, sbn=nsbn,
+                  copt=copt_new, sopt=sopt_new, step=st["step"] + 1)
+        return (st, key), loss
+
+    (st, _), losses = jax.lax.scan(one_step, (st, key),
+                                   jnp.arange(steps))
+
+    # 5. ClientFedServer: FedAvg; BN treatment per bn_mode (see docstring)
+    exclude = bn_mode == "cmsd"
+    st = dict(st, cp=fedavg(st["cp"], exclude_bn=exclude),
+              cbn=aggregate_bn_state(st["cbn"], aggregate=not exclude))
+    return st, losses
+
+
+# --------------------------------------------------------------------------
+# SFLv2 epoch (baseline under study)
+
+def sflv2_epoch(key, st, data, split: SplitModel, opt_c, opt_s, *,
+                num_clients, batch_size, aggregate_bn=True):
+    n_local = data["x"].shape[1]
+    steps = n_local // batch_size
+    order = jax.random.permutation(key, num_clients)
+
+    def per_client(carry, k):
+        st = carry
+        cp_k = jax.tree_util.tree_map(lambda a: a[k], st["cp"])
+        cbn_k = jax.tree_util.tree_map(lambda a: a[k], st["cbn"])
+        copt_k = jax.tree_util.tree_map(lambda a: a[k], st["copt"])
+        xk = data["x"][k]
+        yk = data["y"][k]
+
+        def per_batch(inner, idx):
+            cp, cbn, copt, sp, sbn, sopt, step = inner
+            xb = jax.lax.dynamic_slice_in_dim(xk, idx * batch_size,
+                                              batch_size, axis=0)
+            yb = jax.lax.dynamic_slice_in_dim(yk, idx * batch_size,
+                                              batch_size, axis=0)
+
+            def f(cp_):
+                a, ncs = split.client_fwd(cp_, cbn, xb, True, None)
+                return a, ncs
+            A, vjp, ncbn = jax.vjp(f, cp, has_aux=True)
+
+            def srv_loss(sp_, a):
+                loss, (nss, _) = split.server_loss(sp_, sbn, a, yb, True,
+                                                   None)
+                return loss, nss
+            (loss, nsbn), (g_sp, g_a) = jax.value_and_grad(
+                srv_loss, argnums=(0, 1), has_aux=True)(sp, A)
+            sp_new, sopt_new = opt_s.update(g_sp, sopt, sp, step)
+            g_cp = vjp(g_a)[0]
+            cp_new, copt_new = opt_c.update(g_cp, copt, cp, step)
+            return (cp_new, ncbn, copt_new, sp_new, nsbn, sopt_new,
+                    step + 1), loss
+
+        inner0 = (cp_k, cbn_k, copt_k, st["sp"], st["sbn"], st["sopt"],
+                  st["step"])
+        inner, losses = jax.lax.scan(per_batch, inner0, jnp.arange(steps))
+        cp_k, cbn_k, copt_k, sp, sbn, sopt, step = inner
+        put = lambda t, v: jax.tree_util.tree_map(
+            lambda a, b: a.at[k].set(b), t, v)
+        st = dict(st, cp=put(st["cp"], cp_k), cbn=put(st["cbn"], cbn_k),
+                  copt=put(st["copt"], copt_k), sp=sp, sbn=sbn, sopt=sopt,
+                  step=step)
+        return st, losses
+
+    st, losses = jax.lax.scan(per_client, st, order)
+    st = dict(st, cp=fedavg(st["cp"], exclude_bn=False),
+              cbn=aggregate_bn_state(st["cbn"], aggregate=aggregate_bn))
+    return st, losses
+
+
+# --------------------------------------------------------------------------
+# FL (FedAvg) epoch
+
+def fl_epoch(key, st, data, split: SplitModel, opt_full, *,
+             num_clients, batch_size, aggregate_bn=True):
+    """st here holds full-model copies per client:
+    {"p": (N, ...), "bn": (N, ...), "opt": (N, ...), "step"}."""
+    del key
+    n_local = data["x"].shape[1]
+    steps = n_local // batch_size
+
+    def per_client(p, bn, opt, xk, yk, step0):
+        def per_batch(inner, idx):
+            p, bn, opt, step = inner
+            xb = jax.lax.dynamic_slice_in_dim(xk, idx * batch_size,
+                                              batch_size, axis=0)
+            yb = jax.lax.dynamic_slice_in_dim(yk, idx * batch_size,
+                                              batch_size, axis=0)
+
+            def loss_fn(p_):
+                loss, (ns, _) = split.full_loss(p_, bn, xb, yb, True, None)
+                return loss, ns
+            (loss, nbn), g = jax.value_and_grad(
+                loss_fn, has_aux=True)(p)
+            p_new, opt_new = opt_full.update(g, opt, p, step)
+            return (p_new, nbn, opt_new, step + 1), loss
+
+        (p, bn, opt, _), losses = jax.lax.scan(
+            per_batch, (p, bn, opt, step0), jnp.arange(steps))
+        return p, bn, opt, losses
+
+    p, bn, opt, losses = jax.vmap(
+        per_client, in_axes=(0, 0, 0, 0, 0, None))(
+        st["p"], st["bn"], st["opt"], data["x"], data["y"], st["step"])
+    p = fedavg(p, exclude_bn=False)
+    bn = aggregate_bn_state(bn, aggregate=aggregate_bn)
+    return dict(st, p=p, bn=bn, opt=opt, step=st["step"] + steps), losses
+
+
+def init_fl_state(key, init_fn, num_clients, opt_full):
+    params, state = init_fn(key)
+    full_p = {"client": params["client"], "server": params["server"]}
+    full_s = {"client": state["client"], "server": state["server"]}
+    rep = lambda t: jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a[None], (num_clients,) + a.shape).copy(),
+        t)
+    return {"p": rep(full_p), "bn": rep(full_s),
+            "opt": rep(opt_full.init(full_p)),
+            "step": jnp.zeros((), jnp.int32)}

@@ -1,0 +1,98 @@
+"""Evaluation under the paper's three scenarios and two BN policies.
+
+  * testing IID  — mixed-class batches; the global model (post-FedAvg the
+    client copies are identical except BN) is evaluated once.
+  * testing non-IID — single-class batches, the realistic SFPL deployment:
+    class k's batch runs through client k's model portion (with client k's
+    local BN when exclude_bn was used in aggregation).
+  * RMSD — BatchNorm uses aggregated running statistics at inference.
+  * CMSD — BatchNorm uses the test batch's own statistics.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.metrics import classification_report
+
+
+def _predict_split(split, cp, cbn, sp, sbn, x, rmsd):
+    # RMSD/CMSD applies to the CLIENT-side portion only (paper §VII-A);
+    # the server-side model always uses its running statistics — it was
+    # trained on IID-simulating shuffled pools, so they are well-calibrated.
+    a, _ = split.client_fwd(cp, cbn, x, False, rmsd)
+    _, (_, logits) = split.server_loss(sp, sbn, a,
+                                       jnp.zeros(x.shape[0], jnp.int32),
+                                       False, True)
+    return jnp.argmax(logits, axis=-1)
+
+
+def evaluate_split_iid(st, split, test_x, test_y, num_classes, *,
+                       rmsd=True, batch=256, client_idx=0):
+    """IID test batches through the shared global model (client 0's copy)."""
+    cp = jax.tree_util.tree_map(lambda a: a[client_idx], st["cp"])
+    cbn = jax.tree_util.tree_map(lambda a: a[client_idx], st["cbn"])
+    batch = min(batch, test_x.shape[0])
+    n = (test_x.shape[0] // batch) * batch
+    xs = test_x[:n].reshape(-1, batch, *test_x.shape[1:])
+    ys = test_y[:n].reshape(-1, batch)
+    pred_fn = jax.jit(lambda x: _predict_split(split, cp, cbn, st["sp"],
+                                               st["sbn"], x, rmsd))
+    preds = jnp.concatenate([pred_fn(x) for x in xs])
+    return classification_report(preds, ys.reshape(-1), num_classes)
+
+
+def evaluate_split_noniid(st, split, test_x, test_y, num_classes, *,
+                          rmsd=False, batch=100):
+    """Single-class batches: class k evaluated through client k's portion."""
+    preds_all, labels_all = [], []
+    pred_fn = jax.jit(
+        lambda cp, cbn, x: _predict_split(split, cp, cbn, st["sp"],
+                                          st["sbn"], x, rmsd))
+    for k in range(num_classes):
+        mask = test_y == k
+        xk = test_x[mask]
+        nb = max(1, xk.shape[0] // batch)
+        ci = k  # client k <-> class k (positive-label partitioning)
+        cp = jax.tree_util.tree_map(lambda a: a[min(ci, a.shape[0] - 1)],
+                                    st["cp"])
+        cbn = jax.tree_util.tree_map(lambda a: a[min(ci, a.shape[0] - 1)],
+                                     st["cbn"])
+        for b in range(nb):
+            xb = xk[b * batch:(b + 1) * batch]
+            if xb.shape[0] == 0:
+                continue
+            preds_all.append(pred_fn(cp, cbn, xb))
+            labels_all.append(jnp.full(xb.shape[0], k, jnp.int32))
+    preds = jnp.concatenate(preds_all)
+    labels = jnp.concatenate(labels_all)
+    return classification_report(preds, labels, num_classes)
+
+
+def evaluate_fl(st, split, test_x, test_y, num_classes, *, rmsd=True,
+                batch=256, client_idx=0):
+    p = jax.tree_util.tree_map(lambda a: a[client_idx], st["p"])
+    bn = jax.tree_util.tree_map(lambda a: a[client_idx], st["bn"])
+    batch = min(batch, test_x.shape[0])
+    n = (test_x.shape[0] // batch) * batch
+    xs = test_x[:n].reshape(-1, batch, *test_x.shape[1:])
+    ys = test_y[:n].reshape(-1, batch)
+
+    def pred(x):
+        _, (_, logits) = split.full_loss(p, bn, x,
+                                         jnp.zeros(x.shape[0], jnp.int32),
+                                         False, rmsd)
+        return jnp.argmax(logits, axis=-1)
+
+    pred_fn = jax.jit(pred)
+    preds = jnp.concatenate([pred_fn(x) for x in xs])
+    return classification_report(preds, ys.reshape(-1), num_classes)
+
+
+def weight_divergence(w_a, w_b):
+    """Paper Eq. (11): ||w_a - w_b|| / ||w_b|| over the flattened tree."""
+    fa = jnp.concatenate([jnp.ravel(x) for x in
+                          jax.tree_util.tree_leaves(w_a)])
+    fb = jnp.concatenate([jnp.ravel(x) for x in
+                          jax.tree_util.tree_leaves(w_b)])
+    return jnp.linalg.norm(fa - fb) / jnp.maximum(jnp.linalg.norm(fb), 1e-12)

@@ -1,0 +1,43 @@
+"""SFPL as a first-class feature of the LM training loop.
+
+In the multi-pod deployment each data shard plays the role of a client group
+holding positive-only data; the cut after ``cut_groups`` scan groups is the
+client/server model boundary; the global-collector shuffle is a batch
+permutation of the smashed data (all-to-all over the data axis); the
+de-shuffling gradient routing of Algorithm 1 is the VJP of that gather.
+
+Norm-layer policy for transformer stacks: RMSNorm/LayerNorm carry no running
+statistics, so the RMSD/CMSD distinction is moot (DESIGN.md
+§Arch-applicability); the FedBN-style *non-aggregation of norm parameters*
+corresponds in synchronous SPMD training to norm params being identical
+across shards by construction — recorded here for completeness.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sfpl_lm_loss(model, params, batch_in, cfg, *, perm, cut_groups=1,
+                 training=True):
+    """Loss with SFPL collector shuffle at the cut layer.
+
+    ``model`` is a module exposing forward(params, batch, cfg, ...,
+    collector_perm=, cut_groups=). Labels are permuted to follow their
+    smashed data (the paper ships (A_k, Y_k) pairs through the collector
+    together).
+    """
+    from repro.models.common import chunked_lm_loss
+
+    hidden, aux = model.forward(params, batch_in, cfg, training=training,
+                                collector_perm=perm, cut_groups=cut_groups,
+                                return_hidden=True)
+    labels = jnp.take(batch_in["labels"], perm, axis=0)
+    loss = chunked_lm_loss(hidden, labels,
+                           lambda xc: model.unembed(params, xc, cfg))
+    coef = getattr(cfg, "router_aux_coef", 0.0)
+    return loss + coef * aux, {"xent": loss, "aux": aux}
+
+
+def make_collector_perm(key, global_batch):
+    return jax.random.permutation(key, global_batch)

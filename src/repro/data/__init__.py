@@ -1,0 +1,4 @@
+from repro.data.synthetic import (
+    make_synthetic_cifar, partition_positive_labels, partition_iid)
+from repro.data.augment import augment_batch
+from repro.data.tokens import synthetic_token_stream

@@ -1,0 +1,28 @@
+"""Training-time augmentations used by the paper (flip, crop, normalize,
+small rotation via 90-degree-free shear substitute is skipped: the paper's
+rotation is mild and our synthetic set doesn't need it)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def augment_batch(key, x, *, pad=4):
+    """Random horizontal flip + random crop with reflection padding.
+    x: (B, H, W, C)."""
+    B, H, W, C = x.shape
+    kf, kc = jax.random.split(key)
+    flip = jax.random.bernoulli(kf, 0.5, (B,))
+    x = jnp.where(flip[:, None, None, None], x[:, :, ::-1, :], x)
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)),
+                 mode="reflect")
+    offs = jax.random.randint(kc, (B, 2), 0, 2 * pad + 1)
+
+    def crop_one(img, o):
+        return jax.lax.dynamic_slice(img, (o[0], o[1], 0), (H, W, C))
+
+    return jax.vmap(crop_one)(xp, offs)
+
+
+def normalize(x, mean, std):
+    return (x - jnp.asarray(mean)) / jnp.asarray(std)

@@ -1,0 +1,80 @@
+"""Synthetic class-conditional image dataset + the paper's partitioners.
+
+CIFAR-10/100 are not downloadable in this offline container (DESIGN.md §2),
+so the paper's *phenomena* are reproduced on a learnable synthetic set:
+each class v gets a smooth random template T_v (low-frequency, CIFAR-like
+statistics); samples are T_v + structured noise + random shift. A centralized
+model reaches high accuracy quickly, which is exactly what's needed to
+expose the SFLv2-vs-SFPL gap under positive-only labels.
+
+Partitioners implement the paper's two regimes:
+  * ``partition_positive_labels`` — client k receives ONLY class k
+    (extreme non-IID, |clients| == |classes|)
+  * ``partition_iid``             — shuffled equal shards
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _smooth(key, shape, cutoff=6):
+    """Low-frequency random image: random coarse grid, bilinear-upsampled."""
+    h, w, c = shape
+    coarse = jax.random.normal(key, (cutoff, cutoff, c))
+    img = jax.image.resize(coarse, (h, w, c), method="bilinear")
+    return img / (jnp.std(img) + 1e-6)
+
+
+def make_synthetic_cifar(key, *, num_classes=10, train_per_class=200,
+                         test_per_class=50, hw=32, noise=0.35):
+    """Returns (train_x, train_y, test_x, test_y), images (N, hw, hw, 3)."""
+    kt, kn = jax.random.split(key)
+    templates = jnp.stack([
+        _smooth(jax.random.fold_in(kt, v), (hw, hw, 3))
+        for v in range(num_classes)])                  # (V, hw, hw, 3)
+
+    def gen(key, per_class):
+        n = num_classes * per_class
+        y = jnp.repeat(jnp.arange(num_classes), per_class)
+        k1, k2, k3 = jax.random.split(key, 3)
+        eps = jax.random.normal(k1, (n, hw, hw, 3)) * noise
+        # per-sample smooth distractor (shared across classes) + shifts
+        amp = jax.random.uniform(k2, (n, 1, 1, 1), minval=0.2, maxval=0.6)
+        max_roll = max(1, hw // 10)   # shift scales with image size
+        rolls = jax.random.randint(k3, (n, 2), -max_roll, max_roll + 1)
+        base = templates[y]
+        distract = jnp.roll(base, 1, axis=1) * 0.0
+        x = base + eps + distract * amp
+
+        def roll_one(img, r):
+            return jnp.roll(jnp.roll(img, r[0], axis=0), r[1], axis=1)
+        x = jax.vmap(roll_one)(x, rolls)
+        return x.astype(jnp.float32), y.astype(jnp.int32)
+
+    k1, k2 = jax.random.split(kn)
+    train_x, train_y = gen(k1, train_per_class)
+    test_x, test_y = gen(k2, test_per_class)
+    return train_x, train_y, test_x, test_y
+
+
+def partition_positive_labels(x, y, num_classes):
+    """Client k gets exactly class k. Returns {"x": (N, n, ...), "y": ...}."""
+    xs, ys = [], []
+    n_min = min(int(jnp.sum(y == k)) for k in range(num_classes))
+    for k in range(num_classes):
+        idx = jnp.where(y == k, size=n_min)[0]
+        xs.append(x[idx])
+        ys.append(y[idx])
+    return {"x": jnp.stack(xs), "y": jnp.stack(ys)}
+
+
+def partition_iid(key, x, y, num_clients):
+    """Shuffle then split into equal shards (the paper's IID control)."""
+    n = x.shape[0]
+    per = n // num_clients
+    perm = jax.random.permutation(key, n)[:per * num_clients]
+    xs = x[perm].reshape(num_clients, per, *x.shape[1:])
+    ys = y[perm].reshape(num_clients, per)
+    return {"x": xs, "y": ys}

@@ -1,0 +1,24 @@
+"""Synthetic LM token streams for the assigned-architecture smoke tests and
+the e2e LM training example (a learnable k-th order Markov source)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def synthetic_token_stream(key, *, batch, seq_len, vocab, order=2):
+    """Deterministic-ish Markov chain: next = (a*prev + b*prev2 + c) % vocab
+    with per-stream offsets; learnable by any LM. Returns tokens, labels."""
+    k1, k2 = jax.random.split(key)
+    x0 = jax.random.randint(k1, (batch, order), 0, vocab)
+    offset = jax.random.randint(k2, (batch, 1), 0, vocab)
+
+    def step(carry, _):
+        prev = carry
+        nxt = (3 * prev[:, -1] + 5 * prev[:, -2] + offset[:, 0] + 7) % vocab
+        carry = jnp.concatenate([prev[:, 1:], nxt[:, None]], axis=1)
+        return carry, nxt
+
+    _, toks = jax.lax.scan(step, x0, None, length=seq_len + 1)
+    toks = toks.T                                  # (B, S+1)
+    return toks[:, :-1].astype(jnp.int32), toks[:, 1:].astype(jnp.int32)

@@ -1,0 +1,5 @@
+"""Pallas TPU kernels: flash_attention, rmsnorm, collector_permute.
+
+Each subpackage: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+wrapper), ref.py (pure-jnp oracle used by the test suite).
+"""

@@ -1,0 +1,1 @@
+from repro.kernels.collector_permute import ops, ref

@@ -1,0 +1,44 @@
+"""Pallas-TPU kernel for the SFPL global-collector shuffle.
+
+The collector's shuffle/de-shuffle is a batched row gather over the pooled
+smashed-data tensor: ``out[i] = x[perm[i]]``. On TPU this is a one-pass
+HBM->VMEM->HBM copy when the permutation is prefetched to SMEM and used in
+the *BlockSpec index map* — each grid cell DMAs exactly its source tile, so
+no intermediate materialization or scatter is needed
+(PrefetchScalarGridSpec pattern).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import jax.experimental.pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+
+def _permute_kernel(perm_ref, x_ref, o_ref):
+    del perm_ref  # consumed by the index map, not the body
+    o_ref[...] = x_ref[...]
+
+
+def collector_permute_2d(x, perm, *, block_d=512, interpret=False):
+    """x: (R, D) pooled smashed data (row-major, one row per sample);
+    perm: (R,) int32 destination->source map. Returns x[perm]."""
+    R, D = x.shape
+    assert D % block_d == 0, (D, block_d)
+    grid = (R, D // block_d)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_d), lambda i, j, perm: (perm[i], j)),
+        ],
+        out_specs=pl.BlockSpec((1, block_d), lambda i, j, perm: (i, j)),
+    )
+    return pl.pallas_call(
+        _permute_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((R, D), x.dtype),
+        interpret=interpret,
+        name="sfpl_collector_permute",
+    )(perm.astype(jnp.int32), x)

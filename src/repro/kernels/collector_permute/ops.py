@@ -1,0 +1,26 @@
+"""jit'd wrapper for the collector permutation kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.collector_permute.kernel import collector_permute_2d
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def collector_permute(x, perm, *, interpret=False):
+    """x: (R, ...) smashed-data stack; perm: (R,). Returns x[perm]."""
+    orig_shape = x.shape
+    R = orig_shape[0]
+    d = 1
+    for s in orig_shape[1:]:
+        d *= s
+    x2 = x.reshape(R, d)
+    dp = max(128, -(-d // 128) * 128)
+    if dp != d:
+        x2 = jnp.pad(x2, ((0, 0), (0, dp - d)))
+    block_d = dp if dp <= 512 else 512 if dp % 512 == 0 else 128
+    y = collector_permute_2d(x2, perm, block_d=block_d, interpret=interpret)
+    return y[:, :d].reshape(orig_shape)

@@ -1,0 +1,7 @@
+"""Pure-jnp oracle for the SFPL collector permutation (batched row gather)."""
+from __future__ import annotations
+
+
+def permute_ref(x, perm):
+    """x: (R, d) pooled smashed data; perm: (R,) int32. out[i] = x[perm[i]]."""
+    return x[perm]

@@ -1,0 +1,48 @@
+"""jit'd public wrapper for the flash attention kernel.
+
+Accepts model-layout tensors (B, S, H, D), pads sequence dims to block
+multiples, dispatches to the Pallas kernel, and restores the layout.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_bhsd
+
+
+def _pad_to(x, axis, mult):
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "scale", "bq", "bk", "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=None, scale=None,
+                    bq=128, bk=128, interpret=False):
+    """q: (B, Sq, H, D); k/v: (B, Skv, K, D). Returns (B, Sq, H, D)."""
+    B, Sq, H, D = q.shape
+    Skv = k.shape[1]
+    if scale is None:
+        scale = 1.0 / math.sqrt(D)
+    bq_ = min(bq, max(8, 1 << (Sq - 1).bit_length()))
+    bk_ = min(bk, max(8, 1 << (Skv - 1).bit_length()))
+
+    qt = _pad_to(jnp.transpose(q, (0, 2, 1, 3)), 2, bq_)
+    kt = _pad_to(jnp.transpose(k, (0, 2, 1, 3)), 2, bk_)
+    vt = _pad_to(jnp.transpose(v, (0, 2, 1, 3)), 2, bk_)
+
+    out = flash_attention_bhsd(
+        qt, kt, vt, scale=scale, causal=causal, window=window,
+        kv_len=Skv, bq=bq_, bk=bk_, interpret=interpret)
+    out = out[:, :, :Sq]
+    return jnp.transpose(out, (0, 2, 1, 3))

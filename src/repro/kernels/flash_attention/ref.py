@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.3819763e38
+
+
+def attention_ref(q, k, v, *, causal=True, window=None, scale=None):
+    """q: (B, Sq, H, D); k/v: (B, Skv, K, D) with H % K == 0.
+
+    Positions are assumed to be 0..S-1 (q and kv aligned, Sq == Skv).
+    Returns (B, Sq, H, D) in q.dtype; softmax in fp32.
+    """
+    B, Sq, H, D = q.shape
+    K = k.shape[2]
+    G = H // K
+    if scale is None:
+        scale = 1.0 / math.sqrt(D)
+    qf = q.reshape(B, Sq, K, G, D).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qf, kf) * scale
+    Skv = k.shape[1]
+    iq = jnp.arange(Sq)[:, None]
+    ik = jnp.arange(Skv)[None, :]
+    delta = iq - ik
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask = mask & (delta >= 0)
+    if window is not None:
+        mask = mask & (delta < window)
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, D).astype(q.dtype)

@@ -1,0 +1,1 @@
+from repro.kernels.rmsnorm import ops, ref

@@ -1,0 +1,35 @@
+"""jit'd wrapper: reshapes (..., d) -> rows, pads rows/features, dispatches."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rmsnorm.kernel import rmsnorm_2d
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "scale_offset",
+                                             "interpret"))
+def rmsnorm(x, scale, *, eps=1e-6, scale_offset=0.0, interpret=False):
+    orig_shape = x.shape
+    d = orig_shape[-1]
+    rows = 1
+    for s in orig_shape[:-1]:
+        rows *= s
+    x2 = x.reshape(rows, d)
+
+    dp = max(128, -(-d // 128) * 128)
+    if dp != d:
+        x2 = jnp.pad(x2, ((0, 0), (0, dp - d)))
+        scale_p = jnp.pad(scale, (0, dp - d))
+    else:
+        scale_p = scale
+    br = min(256, max(8, 1 << (rows - 1).bit_length()))
+    rp = -(-rows // br) * br
+    if rp != rows:
+        x2 = jnp.pad(x2, ((0, rp - rows), (0, 0)))
+
+    y = rmsnorm_2d(x2, scale_p, eps=eps, scale_offset=scale_offset,
+                   block_rows=br, d_real=d, interpret=interpret)
+    return y[:rows, :d].reshape(orig_shape)

@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the fused RMSNorm kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rmsnorm_ref(x, scale, *, eps=1e-6, scale_offset=0.0):
+    x32 = x.astype(jnp.float32)
+    ms = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 / jnp.sqrt(ms + eps)
+    return (y * (scale.astype(jnp.float32) + scale_offset)).astype(x.dtype)

@@ -1,0 +1,32 @@
+"""jit'd wrapper: pads batch/time to block multiples, dispatches."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.slstm_scan.kernel import slstm_scan_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def slstm_scan(pre_i, pre_f, pre_z, pre_o, R, *, interpret=False):
+    """pre_*: (B, S, H, Dh); R: (4, H, Dh, Dh). Returns h (B, S, H, Dh).
+
+    Padded time steps use -inf forget preactivation... note: padding with
+    zeros is safe because padded steps come AFTER all real steps (state for
+    real outputs is unaffected) and their outputs are sliced away.
+    """
+    B, S, H, Dh = pre_i.shape
+    HD = H * Dh
+    bb = min(8, B)
+    while B % bb:
+        bb -= 1
+    tc = min(64, S)
+    Sp = -(-S // tc) * tc
+    flat = lambda p: jnp.pad(p.reshape(B, S, HD).astype(jnp.float32),
+                             ((0, 0), (0, Sp - S), (0, 0)))
+    out = slstm_scan_pallas(flat(pre_i), flat(pre_f), flat(pre_z),
+                            flat(pre_o), R.astype(jnp.float32),
+                            block_b=bb, time_chunk=tc, interpret=interpret)
+    return out[:, :S].reshape(B, S, H, Dh)

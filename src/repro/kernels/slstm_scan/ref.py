@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the fused sLSTM scan kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def slstm_scan_ref(pre_i, pre_f, pre_z, pre_o, R, state0):
+    """Stabilized sLSTM recurrence (xLSTM eqs.), block-diagonal per head.
+
+    pre_*: (B, S, H, Dh) fp32 input-side gate preactivations.
+    R: (4, H, Dh, Dh) recurrent matrices in gate order (i, f, z, o).
+    state0: (c, n, m, h) each (B, H, Dh) fp32.
+    Returns h_seq (B, S, H, Dh) and the final state tuple.
+    """
+    def step(carry, xs):
+        c, n, m, h = carry
+        xi, xf, xz, xo = xs
+        rec = jnp.einsum("bhd,ghde->gbhe", h, R)
+        i_pre = xi + rec[0]
+        f_pre = xf + rec[1]
+        z = jnp.tanh(xz + rec[2])
+        o = jax.nn.sigmoid(xo + rec[3])
+        logf = jax.nn.log_sigmoid(f_pre)
+        m_new = jnp.maximum(logf + m, i_pre)
+        i_s = jnp.exp(i_pre - m_new)
+        f_s = jnp.exp(logf + m - m_new)
+        c_new = f_s * c + i_s * z
+        n_new = jnp.maximum(f_s * n + i_s, 1e-6)
+        h_new = o * (c_new / n_new)
+        return (c_new, n_new, m_new, h_new), h_new
+
+    xs = tuple(p.swapaxes(0, 1) for p in (pre_i, pre_f, pre_z, pre_o))
+    final, hs = jax.lax.scan(step, state0, xs)
+    return hs.swapaxes(0, 1), final

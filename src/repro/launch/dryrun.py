@@ -1,0 +1,196 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# Multi-pod dry-run: lower + compile every (arch x shape x mesh) and dump
+# memory/cost/collective analysis. The XLA_FLAGS line above MUST execute
+# before any jax import (jax locks the device count on first init).
+#
+# Usage:
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-8b \
+#       --shape train_4k [--multi-pod] [--sfpl] [--out results.json]
+#   PYTHONPATH=src python -m repro.launch.dryrun --all --out-dir dryrun_out
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch, list_archs, input_specs, SHAPES
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import (
+    make_train_step, make_prefill_step, make_decode_step)
+from repro.optim import sgd_momentum
+from repro.sharding import param_shardings, batch_shardings, state_shardings
+from repro.roofline.hlo import collective_bytes_from_text
+
+
+def _named(mesh, spec=None):
+    from jax.sharding import PartitionSpec as P
+    return jax.sharding.NamedSharding(mesh, spec or P())
+
+
+def lower_one(arch_id, shape_name, *, multi_pod=False, sfpl=False,
+              optimizer="sgdm", cfg_overrides=None, keep_text=False,
+              fsdp=True):
+    """Returns a result dict with memory/cost analysis + collective bytes."""
+    spec = get_arch(arch_id)
+    shape = SHAPES[shape_name]
+    skip = spec.skip_reason(shape)
+    if skip:
+        return {"arch": arch_id, "shape": shape_name, "skipped": skip}
+
+    mesh_axes = (("pod", 2), ("data", 16), ("model", 16)) if multi_pod \
+        else (("data", 16), ("model", 16))
+    overrides = dict(cfg_overrides or {})
+    overrides.setdefault("mesh_axes", mesh_axes)
+    cfg = spec.make_config(**overrides)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    model = spec.model
+    t0 = time.time()
+
+    params_sds = jax.eval_shape(
+        lambda: model.init(jax.random.PRNGKey(0), cfg))
+    p_shard = param_shardings(params_sds, mesh, fsdp=fsdp)
+    specs = input_specs(spec, cfg, shape)
+
+    with mesh:
+        if shape.kind == "train":
+            opt = (sgd_momentum(1e-2, momentum=0.9,
+                                state_dtype=jnp.float32)
+                   if optimizer == "sgdm" else None)
+            opt_sds = jax.eval_shape(opt.init, params_sds)
+            opt_shard = jax.tree_util.tree_map(
+                lambda _: None, opt_sds,
+                is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+            opt_shard = {"mu": p_shard}
+            batch = dict(specs)
+            if sfpl:
+                batch["perm"] = jax.ShapeDtypeStruct(
+                    (shape.global_batch,), jnp.int32)
+            b_shard = batch_shardings(specs, mesh)
+            if sfpl:
+                b_shard["perm"] = _named(mesh)
+            step_fn = make_train_step(spec, cfg,
+                                      opt, sfpl=sfpl)
+            step_sds = jax.ShapeDtypeStruct((), jnp.int32)
+            jf = jax.jit(step_fn,
+                         in_shardings=(p_shard, opt_shard, _named(mesh),
+                                       b_shard),
+                         donate_argnums=(0, 1))
+            lowered = jf.lower(params_sds, opt_sds, step_sds, batch)
+        elif shape.kind == "prefill":
+            step_fn = make_prefill_step(spec, cfg)
+            b_shard = batch_shardings(specs, mesh)
+            jf = jax.jit(step_fn, in_shardings=(p_shard, b_shard))
+            lowered = jf.lower(params_sds, specs)
+        else:  # decode
+            step_fn = make_decode_step(spec, cfg)
+            state_sds = specs["state"]
+            s_shard = state_shardings(state_sds, mesh)
+            tok_sds = specs["tokens"]
+            t_shard = batch_shardings({"tokens": tok_sds}, mesh)["tokens"]
+            pos_sds = jax.ShapeDtypeStruct((), jnp.int32)
+            jf = jax.jit(step_fn,
+                         in_shardings=(p_shard, s_shard, t_shard,
+                                       _named(mesh)),
+                         donate_argnums=(1,))
+            lowered = jf.lower(params_sds, state_sds, tok_sds, pos_sds)
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    text = compiled.as_text()
+    coll = collective_bytes_from_text(text)
+
+    n_dev = mesh.devices.size
+    result = {
+        "arch": arch_id,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "devices": n_dev,
+        "sfpl": sfpl,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "alias_bytes": getattr(mem, "alias_size_in_bytes", None),
+            "code_bytes": getattr(mem, "generated_code_size_in_bytes",
+                                  None),
+        },
+        "cost": {
+            "flops": cost.get("flops"),
+            "bytes_accessed": cost.get("bytes accessed"),
+        },
+        "collectives": coll,
+    }
+    if keep_text:
+        result["hlo_text"] = text
+    return result
+
+
+def summarize(res):
+    if "skipped" in res:
+        return f"{res['arch']:28s} {res['shape']:12s} SKIP: {res['skipped'][:50]}"
+    m = res["memory"]
+    per_dev = (m["argument_bytes"] or 0) + (m["temp_bytes"] or 0) \
+        - (m.get("alias_bytes") or 0)
+    return (f"{res['arch']:28s} {res['shape']:12s} {res['mesh']:8s} "
+            f"args+temp-alias={per_dev/2**30:7.2f}GiB/dev "
+            f"flops={res['cost']['flops'] or 0:.3e} "
+            f"coll={sum(v['bytes'] for v in res['collectives'].values())/2**30:.2f}GiB "
+            f"compile={res['compile_s']:.0f}s")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--sfpl", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out")
+    ap.add_argument("--out-dir")
+    args = ap.parse_args()
+
+    jobs = []
+    if args.all:
+        for a in list_archs():
+            for s in SHAPES:
+                jobs.append((a, s, args.multi_pod))
+    else:
+        jobs.append((args.arch, args.shape, args.multi_pod))
+
+    results = []
+    for arch_id, shape_name, mp in jobs:
+        try:
+            res = lower_one(arch_id, shape_name, multi_pod=mp,
+                            sfpl=args.sfpl)
+        except Exception as e:   # record failures, keep sweeping
+            res = {"arch": arch_id, "shape": shape_name,
+                   "mesh": "2x16x16" if mp else "16x16",
+                   "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-2000:]}
+            print(f"FAIL {arch_id} {shape_name}: {e}", flush=True)
+        results.append(res)
+        if "error" not in res:
+            print(summarize(res), flush=True)
+        if args.out_dir:
+            os.makedirs(args.out_dir, exist_ok=True)
+            fn = f"{arch_id}_{shape_name}_{res.get('mesh','NA')}.json"
+            with open(os.path.join(args.out_dir, fn), "w") as f:
+                json.dump(res, f, indent=1)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""LM evaluation: perplexity / token accuracy over a token stream.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.eval --arch qwen3-8b --batches 8
+"""
+from __future__ import annotations
+
+import argparse
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch
+from repro.data.tokens import synthetic_token_stream
+from repro.models.common import softmax_cross_entropy
+
+
+def evaluate_lm(spec, cfg, params, *, batches=8, batch=8, seq=64, seed=0):
+    """Returns {loss, ppl, token_accuracy} over the synthetic stream."""
+    model = spec.model
+    key = jax.random.PRNGKey(seed)
+
+    @jax.jit
+    def eval_batch(params, batch_in):
+        logits, _ = model.forward(params, batch_in, cfg, training=False)
+        loss = softmax_cross_entropy(logits, batch_in["labels"])
+        acc = jnp.mean(
+            (jnp.argmax(logits, -1) == batch_in["labels"]).astype(
+                jnp.float32))
+        return loss, acc
+
+    tot_loss, tot_acc = 0.0, 0.0
+    for i in range(batches):
+        key, kd = jax.random.split(key)
+        toks, labels = synthetic_token_stream(kd, batch=batch, seq_len=seq,
+                                              vocab=cfg.vocab_size)
+        b = {"tokens": toks, "labels": labels}
+        if spec.family == "whisper":
+            b["frame_embeds"] = jax.random.normal(
+                kd, (batch, 16, cfg.d_model), jnp.float32)
+        if getattr(cfg, "vision_tokens", 0):
+            b["vision_embeds"] = jax.random.normal(
+                kd, (batch, cfg.vision_tokens, cfg.d_model))
+        loss, acc = eval_batch(params, b)
+        tot_loss += float(loss)
+        tot_acc += float(acc)
+    loss = tot_loss / batches
+    return {"loss": loss, "ppl": math.exp(min(loss, 30.0)),
+            "token_accuracy": tot_acc / batches}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-8b")
+    ap.add_argument("--batches", type=int, default=8)
+    ap.add_argument("--ckpt")
+    args = ap.parse_args()
+    spec = get_arch(args.arch)
+    cfg = spec.make_smoke_config()
+    params = spec.model.init(jax.random.PRNGKey(0), cfg)
+    if args.ckpt:
+        from repro.checkpoint import restore_checkpoint
+        params, step = restore_checkpoint(args.ckpt, params)
+        print(f"restored step {step}")
+    m = evaluate_lm(spec, cfg, params, batches=args.batches)
+    print(f"{args.arch}: loss {m['loss']:.4f}  ppl {m['ppl']:.1f}  "
+          f"token-acc {m['token_accuracy']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

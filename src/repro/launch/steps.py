@@ -1,0 +1,56 @@
+"""Step functions (train / prefill / decode) shared by dryrun, train, serve."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def make_train_step(spec, cfg, optimizer, *, sfpl=False, cut_groups=1):
+    """Returns train_step(params, opt_state, step, batch[, perm]).
+
+    With ``sfpl=True`` (transformer family) the batch dict must contain
+    "perm" — the global-collector permutation; the smashed data is shuffled
+    at the cut layer inside the step (all-to-all over the data axis) and the
+    gradient de-shuffle is the VJP of that gather.
+    """
+    model = spec.model
+
+    def loss_of(params, batch):
+        if sfpl and spec.family == "transformer":
+            from repro.core.split_lm import sfpl_lm_loss
+            return sfpl_lm_loss(model, params, batch, cfg,
+                                perm=batch["perm"], cut_groups=cut_groups)
+        clean = {k: v for k, v in batch.items() if k != "perm"}
+        return model.loss_fn(params, clean, cfg, training=True)
+
+    def train_step(params, opt_state, step, batch):
+        (loss, _), grads = jax.value_and_grad(
+            lambda p: loss_of(p, batch), has_aux=True)(params)
+        new_params, new_opt = optimizer.update(grads, opt_state, params,
+                                               step)
+        return new_params, new_opt, step + 1, loss
+
+    return train_step
+
+
+def make_prefill_step(spec, cfg):
+    model = spec.model
+
+    def prefill_step(params, batch):
+        # serving prefill: only the final position's logits are needed to
+        # seed decode; returning (B, S, V) logits would dominate memory.
+        logits, _ = model.forward(params, batch, cfg, training=False,
+                                  last_token_only=True)
+        return logits
+
+    return prefill_step
+
+
+def make_decode_step(spec, cfg):
+    model = spec.model
+
+    def decode_step(params, state, tokens, cur_pos):
+        return model.decode_step(params, state, tokens, cfg,
+                                 cur_pos=cur_pos)
+
+    return decode_step

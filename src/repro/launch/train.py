@@ -1,0 +1,93 @@
+"""Training driver.
+
+Two modes:
+  * LM mode (default): train an assigned-architecture smoke config on the
+    synthetic Markov token stream — runnable on CPU, demonstrates the full
+    step (optimizer, schedule, checkpointing) and the SFPL collector option
+    (``--sfpl`` inserts the cut-layer shuffle into the jitted step).
+  * Paper mode (``--paper``): the SFPL/SFLv2/FL round engines on the
+    synthetic CIFAR-like set with ResNet-8/32/56 (see examples/ and
+    benchmarks/ for the full study).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-8b --smoke \
+      --steps 50 [--sfpl] [--ckpt out.npz]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch
+from repro.data.tokens import synthetic_token_stream
+from repro.launch.steps import make_train_step
+from repro.optim import sgd_momentum, adamw, cosine_lr
+from repro.checkpoint import save_checkpoint
+
+
+def train_lm(arch_id, *, steps=50, batch=8, seq=64, smoke=True, sfpl=False,
+             lr=3e-3, optimizer="adamw", ckpt=None, log_every=10):
+    spec = get_arch(arch_id)
+    cfg = (spec.make_smoke_config() if smoke else spec.make_config())
+    model = spec.model
+    key = jax.random.PRNGKey(0)
+    params = model.init(key, cfg)
+
+    opt = (adamw(cosine_lr(lr, steps)) if optimizer == "adamw"
+           else sgd_momentum(cosine_lr(lr, steps), momentum=0.9))
+    opt_state = opt.init(params)
+    step_fn = jax.jit(make_train_step(spec, cfg, opt, sfpl=sfpl))
+
+    vocab = cfg.vocab_size
+    step = jnp.zeros((), jnp.int32)
+    t0 = time.time()
+    losses = []
+    for i in range(steps):
+        key, kd, kp = jax.random.split(key, 3)
+        toks, labels = synthetic_token_stream(kd, batch=batch, seq_len=seq,
+                                              vocab=vocab)
+        batch_in = {"tokens": toks, "labels": labels}
+        if spec.family == "whisper":
+            batch_in["frame_embeds"] = jax.random.normal(
+                kd, (batch, 16, cfg.d_model), jnp.float32)
+        if getattr(cfg, "vision_tokens", 0):
+            batch_in["vision_embeds"] = jax.random.normal(
+                kd, (batch, cfg.vision_tokens, cfg.d_model))
+        if sfpl:
+            batch_in["perm"] = jax.random.permutation(kp, batch)
+        params, opt_state, step, loss = step_fn(params, opt_state, step,
+                                                batch_in)
+        losses.append(float(loss))
+        if i % log_every == 0 or i == steps - 1:
+            print(f"step {i:4d} loss {float(loss):.4f} "
+                  f"({time.time()-t0:.1f}s)", flush=True)
+    if ckpt:
+        save_checkpoint(ckpt, params, step=int(step))
+        print(f"saved checkpoint to {ckpt}")
+    return losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-8b")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--full", dest="smoke", action="store_false")
+    ap.add_argument("--sfpl", action="store_true")
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--optimizer", default="adamw")
+    ap.add_argument("--ckpt")
+    args = ap.parse_args()
+    losses = train_lm(args.arch, steps=args.steps, batch=args.batch,
+                      seq=args.seq, smoke=args.smoke, sfpl=args.sfpl,
+                      lr=args.lr, optimizer=args.optimizer, ckpt=args.ckpt)
+    print(f"first loss {losses[0]:.4f} -> last loss {losses[-1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

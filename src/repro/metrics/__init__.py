@@ -1,0 +1,3 @@
+from repro.metrics.classification import (
+    precision_at_1, recall_macro, f1_macro, accuracy, confusion_matrix,
+    classification_report)

@@ -1,0 +1,55 @@
+"""Classification metrics used by the paper: Precision@1, Recall, F1,
+Accuracy (all macro-averaged over classes, matching the paper's tables)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def confusion_matrix(preds, labels, num_classes):
+    idx = labels * num_classes + preds
+    cm = jnp.bincount(idx, length=num_classes * num_classes)
+    return cm.reshape(num_classes, num_classes).astype(jnp.float32)
+
+
+def _prf(cm):
+    tp = jnp.diag(cm)
+    pred_pos = jnp.sum(cm, axis=0)
+    actual_pos = jnp.sum(cm, axis=1)
+    precision = tp / jnp.maximum(pred_pos, 1e-9)
+    recall = tp / jnp.maximum(actual_pos, 1e-9)
+    f1 = 2 * precision * recall / jnp.maximum(precision + recall, 1e-9)
+    return precision, recall, f1
+
+
+def precision_at_1(preds, labels, num_classes):
+    cm = confusion_matrix(preds, labels, num_classes)
+    p, _, _ = _prf(cm)
+    return jnp.mean(p)
+
+
+def recall_macro(preds, labels, num_classes):
+    cm = confusion_matrix(preds, labels, num_classes)
+    _, r, _ = _prf(cm)
+    return jnp.mean(r)
+
+
+def f1_macro(preds, labels, num_classes):
+    cm = confusion_matrix(preds, labels, num_classes)
+    _, _, f = _prf(cm)
+    return jnp.mean(f)
+
+
+def accuracy(preds, labels):
+    return jnp.mean((preds == labels).astype(jnp.float32))
+
+
+def classification_report(preds, labels, num_classes):
+    cm = confusion_matrix(preds, labels, num_classes)
+    p, r, f = _prf(cm)
+    return {
+        "precision@1": float(jnp.mean(p)),
+        "recall": float(jnp.mean(r)),
+        "f1": float(jnp.mean(f)),
+        "accuracy": float(accuracy(preds, labels)) * 100.0,
+        "per_class_acc": jnp.diag(cm) / jnp.maximum(jnp.sum(cm, 1), 1e-9),
+    }

@@ -1,0 +1,383 @@
+"""RecurrentGemma / Griffin (arXiv:2402.19427): RG-LRU + local-MQA hybrid.
+
+Block pattern is (recurrent, recurrent, local-attention) repeating — the
+assigned recurrentgemma-9b has 38 layers = 12 full triples + 2 trailing
+recurrent blocks. Each block is residual: temporal-mixing + GeGLU MLP.
+
+TPU adaptation: the RG-LRU diagonal linear recurrence
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+is evaluated with ``jax.lax.associative_scan`` (log-depth, maps to efficient
+TPU scans) for train/prefill, and a single fused elementwise step for decode.
+Local attention uses the shared GQA layer with a 2048-token sliding window,
+so decode state is O(window) and the 500k-token shape stays sub-quadratic.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (softmax_cross_entropy, maybe_remat,
+                                 constrain_act, chunked_lm_loss,
+                                 constrain_dims)
+from repro.nn.attention import (
+    AttnConfig, attention_init, attention_apply, attention_decode,
+    init_kv_cache)
+from repro.nn.linear import (
+    dense_init, dense_apply, embedding_init, embedding_apply,
+    embedding_attend)
+from repro.nn.norm import rmsnorm_init, rmsnorm_apply
+from repro.nn.init import normal_init
+from repro.models.xlstm import (
+    causal_conv_init, causal_conv_apply, causal_conv_step)
+
+
+@dataclasses.dataclass(frozen=True)
+class RGLRUConfig:
+    name: str = "recurrentgemma"
+    num_layers: int = 38
+    d_model: int = 4096
+    num_heads: int = 16
+    num_kv_heads: int = 1          # MQA
+    head_dim: int = 256
+    d_ff: int = 12288
+    vocab_size: int = 256000
+    d_rnn: int = 0                 # 0 -> d_model
+    conv_kernel: int = 4
+    window: int = 2048
+    lru_c: float = 8.0
+    norm_eps: float = 1e-6
+    embed_scale: bool = True       # gemma convention
+    norm_scale_offset: float = 1.0
+    pattern: tuple = ("rec", "rec", "attn")
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    attention_impl: str = "xla"
+    remat: bool = True
+    scan_layers: bool = True
+    mesh_axes: tuple = None   # see common.constrain_act
+
+    @property
+    def rnn_width(self):
+        return self.d_rnn or self.d_model
+
+    @property
+    def num_groups(self):
+        return self.num_layers // len(self.pattern)
+
+    @property
+    def num_trailing(self):
+        return self.num_layers % len(self.pattern)
+
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    def cdtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+
+def _attn_cfg(cfg: RGLRUConfig):
+    return AttnConfig(
+        d_model=cfg.d_model, num_heads=cfg.num_heads,
+        num_kv_heads=cfg.num_kv_heads, head_dim=cfg.head_dim,
+        rope_theta=10000.0, sliding_window=cfg.window,
+        impl=cfg.attention_impl, mesh_axes=cfg.mesh_axes)
+
+
+# --------------------------------------------------------------------------
+# RG-LRU cell
+
+def rglru_init(key, width, dtype):
+    ks = jax.random.split(key, 3)
+    # Lambda init so that a ~ uniform(0.9, 0.999) at r=0.5 (griffin appendix)
+    lam = normal_init(ks[0], (width,), stddev=0.5, dtype=jnp.float32) + 4.0
+    return {
+        "lambda": lam,
+        "w_r": dense_init(ks[1], width, width, use_bias=True, dtype=dtype),
+        "w_i": dense_init(ks[2], width, width, use_bias=True, dtype=dtype),
+    }
+
+
+def _rglru_gates(p, x, c):
+    r = jax.nn.sigmoid(dense_apply(p["w_r"], x).astype(jnp.float32))
+    i = jax.nn.sigmoid(dense_apply(p["w_i"], x).astype(jnp.float32))
+    log_a = -c * jax.nn.softplus(p["lambda"]) * r          # (..., width)
+    a = jnp.exp(log_a)
+    gated_x = i * x.astype(jnp.float32)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * gated_x
+    return a, b
+
+
+def rglru_apply(p, x, *, c=8.0, mesh_axes=None):
+    """x: (B, S, W) -> (B, S, W) via associative scan over S."""
+    a, b = _rglru_gates(p, x, c)
+    a = constrain_dims(a, mesh_axes, ("dp", None, "tp"))
+    b = constrain_dims(b, mesh_axes, ("dp", None, "tp"))
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    a_cum, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    del a_cum
+    return h.astype(x.dtype)
+
+
+def rglru_step(p, x_t, h_prev, *, c=8.0):
+    """x_t: (B, W); h_prev: (B, W) fp32. Returns (y, h_new)."""
+    a, b = _rglru_gates(p, x_t, c)
+    h_new = a * h_prev + b
+    return h_new.astype(x_t.dtype), h_new
+
+
+# --------------------------------------------------------------------------
+# blocks
+
+def rec_block_init(key, cfg: RGLRUConfig):
+    ks = jax.random.split(key, 6)
+    dt = cfg.pdtype()
+    W = cfg.rnn_width
+    return {
+        "norm": rmsnorm_init(ks[0], cfg.d_model, dtype=dt),
+        "up_main": dense_init(ks[1], cfg.d_model, W, use_bias=False,
+                              dtype=dt),
+        "up_gate": dense_init(ks[2], cfg.d_model, W, use_bias=False,
+                              dtype=dt),
+        "conv": causal_conv_init(ks[3], W, cfg.conv_kernel, dt),
+        "lru": rglru_init(ks[4], W, dt),
+        "down": dense_init(ks[5], W, cfg.d_model, use_bias=False, dtype=dt),
+    }
+
+
+def attn_block_init(key, cfg: RGLRUConfig):
+    ks = jax.random.split(key, 2)
+    return {
+        "norm": rmsnorm_init(ks[0], cfg.d_model, dtype=cfg.pdtype()),
+        "attn": attention_init(ks[1], _attn_cfg(cfg), dtype=cfg.pdtype()),
+    }
+
+
+def mlp_block_init(key, cfg: RGLRUConfig):
+    ks = jax.random.split(key, 3)
+    dt = cfg.pdtype()
+    return {
+        "norm": rmsnorm_init(ks[0], cfg.d_model, dtype=dt),
+        "up": dense_init(ks[1], cfg.d_model, 2 * cfg.d_ff, use_bias=False,
+                         dtype=dt),
+        "down": dense_init(ks[2], cfg.d_ff, cfg.d_model, use_bias=False,
+                           dtype=dt),
+    }
+
+
+def _mlp_apply(p, x, cfg):
+    h = rmsnorm_apply(p["norm"], x, eps=cfg.norm_eps,
+                      scale_offset=cfg.norm_scale_offset)
+    up = dense_apply(p["up"], h)
+    a, b = jnp.split(up, 2, axis=-1)
+    return dense_apply(p["down"], jax.nn.gelu(a) * b).astype(x.dtype)
+
+
+def rec_block_apply(p, x, cfg: RGLRUConfig):
+    h = rmsnorm_apply(p["norm"], x, eps=cfg.norm_eps,
+                      scale_offset=cfg.norm_scale_offset)
+    main = constrain_dims(dense_apply(p["up_main"], h), cfg.mesh_axes,
+                          ("dp", None, "tp"))
+    gate = jax.nn.gelu(dense_apply(p["up_gate"], h))
+    conv = causal_conv_apply(p["conv"], main)
+    y = rglru_apply(p["lru"], conv, c=cfg.lru_c, mesh_axes=cfg.mesh_axes)
+    return dense_apply(p["down"], y * gate).astype(x.dtype)
+
+
+def rec_block_step(p, x_t, state, cfg: RGLRUConfig):
+    """x_t: (B, 1, d). state: {conv_buf, h}."""
+    h = rmsnorm_apply(p["norm"], x_t, eps=cfg.norm_eps,
+                      scale_offset=cfg.norm_scale_offset)[:, 0]
+    main = dense_apply(p["up_main"], h)
+    gate = jax.nn.gelu(dense_apply(p["up_gate"], h))
+    conv_y, new_buf = causal_conv_step(p["conv"], main, state["conv_buf"])
+    y, h_new = rglru_step(p["lru"], conv_y, state["h"], c=cfg.lru_c)
+    out = dense_apply(p["down"], y * gate)
+    return out[:, None].astype(x_t.dtype), {"conv_buf": new_buf, "h": h_new}
+
+
+def attn_block_apply(p, x, cfg: RGLRUConfig, positions):
+    h = rmsnorm_apply(p["norm"], x, eps=cfg.norm_eps,
+                      scale_offset=cfg.norm_scale_offset)
+    return attention_apply(p["attn"], h, _attn_cfg(cfg),
+                           positions=positions).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# full model
+
+def _cast(tree, cfg):
+    return jax.tree_util.tree_map(
+        lambda a: a.astype(cfg.cdtype())
+        if jnp.issubdtype(a.dtype, jnp.floating) else a, tree)
+
+
+def _group_init(key, cfg: RGLRUConfig, pattern):
+    gp = {}
+    for i, kind in enumerate(pattern):
+        k1, k2, key = jax.random.split(key, 3)
+        blk = (rec_block_init(k1, cfg) if kind == "rec"
+               else attn_block_init(k1, cfg))
+        gp[f"sub{i}"] = {"mix": blk, "mlp": mlp_block_init(k2, cfg)}
+    return gp
+
+
+def init(key, cfg: RGLRUConfig):
+    ke, kl, kt, kn = jax.random.split(key, 4)
+    params = {
+        "embed": embedding_init(ke, cfg.vocab_size, cfg.d_model,
+                                dtype=cfg.pdtype()),
+        "final_norm": rmsnorm_init(kn, cfg.d_model, dtype=cfg.pdtype()),
+    }
+    groups = [_group_init(jax.random.fold_in(kl, g), cfg, cfg.pattern)
+              for g in range(cfg.num_groups)]
+    params["layers"] = jax.tree_util.tree_map(
+        lambda *xs: jnp.stack(xs), *groups)
+    if cfg.num_trailing:
+        params["trailing"] = _group_init(
+            kt, cfg, cfg.pattern[:cfg.num_trailing])
+    return params
+
+
+def _apply_group(gp, x, cfg, positions, pattern, *, remat=False):
+    def one(x, sub, kind):
+        sub = _cast(sub, cfg)
+        if kind == "rec":
+            x = x + rec_block_apply(sub["mix"], x, cfg)
+        else:
+            x = x + attn_block_apply(sub["mix"], x, cfg, positions)
+        return x + _mlp_apply(sub["mlp"], x, cfg)
+
+    for i, kind in enumerate(pattern):
+        f = (jax.checkpoint(lambda x_, s_, kind=kind: one(x_, s_, kind))
+             if remat else (lambda x_, s_, kind=kind: one(x_, s_, kind)))
+        x = f(x, gp[f"sub{i}"])
+    return x
+
+
+def unembed(params, x, cfg: RGLRUConfig):
+    logits = embedding_attend(params["embed"], x, compute_dtype=cfg.cdtype())
+    return constrain_act(logits, cfg, kind="logits")
+
+
+def forward(params, batch_in, cfg: RGLRUConfig, *, training=True,
+            return_hidden=False, last_token_only=False):
+    tokens = batch_in["tokens"]
+    B, S = tokens.shape
+    x = embedding_apply(params["embed"], tokens, compute_dtype=cfg.cdtype())
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    def group_fn(x, gp):
+        x = _apply_group(gp, x, cfg, positions, cfg.pattern,
+                         remat=cfg.remat and training)
+        return constrain_act(x, cfg), None
+
+    body = group_fn   # per-block remat happens inside _apply_group
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(body, x, params["layers"])
+    else:
+        for g in range(cfg.num_groups):
+            gp = jax.tree_util.tree_map(lambda a, g=g: a[g], params["layers"])
+            x, _ = body(x, gp)
+    if cfg.num_trailing:
+        x = _apply_group(params["trailing"], x, cfg, positions,
+                         cfg.pattern[:cfg.num_trailing])
+    x = rmsnorm_apply(params["final_norm"], x, eps=cfg.norm_eps,
+                      scale_offset=cfg.norm_scale_offset)
+    if last_token_only:
+        x = x[:, -1:]
+    if return_hidden:
+        return x, jnp.zeros((), jnp.float32)
+    return unembed(params, x, cfg).astype(jnp.float32), \
+        jnp.zeros((), jnp.float32)
+
+
+def loss_fn(params, batch_in, cfg: RGLRUConfig, *, training=True):
+    hidden, _ = forward(params, batch_in, cfg, training=training,
+                        return_hidden=True)
+    loss = chunked_lm_loss(hidden, batch_in["labels"],
+                           lambda xc: unembed(params, xc, cfg))
+    return loss, {"xent": loss}
+
+
+# --------------------------------------------------------------------------
+# decode
+
+def _rec_state_init(cfg, batch):
+    return {
+        "conv_buf": jnp.zeros((batch, cfg.conv_kernel - 1, cfg.rnn_width),
+                              cfg.cdtype()),
+        "h": jnp.zeros((batch, cfg.rnn_width), jnp.float32),
+    }
+
+
+def _attn_state_init(cfg, batch, max_len, dtype):
+    slots = min(max_len, cfg.window)
+    return init_kv_cache(batch, slots, cfg.num_kv_heads, cfg.head_dim,
+                         dtype=dtype)
+
+
+def init_decode_state(cfg: RGLRUConfig, batch, max_len,
+                      *, dtype=jnp.bfloat16):
+    state = {"groups": {}, "trailing": {}}
+    for i, kind in enumerate(cfg.pattern):
+        one = (_rec_state_init(cfg, batch) if kind == "rec"
+               else _attn_state_init(cfg, batch, max_len, dtype))
+        state["groups"][f"sub{i}"] = jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a[None],
+                                       (cfg.num_groups,) + a.shape), one)
+    for i, kind in enumerate(cfg.pattern[:cfg.num_trailing]):
+        state["trailing"][f"sub{i}"] = (
+            _rec_state_init(cfg, batch) if kind == "rec"
+            else _attn_state_init(cfg, batch, max_len, dtype))
+    return state
+
+
+def _step_group(gp, gs, x, cfg, cur_pos, pattern):
+    ns = {}
+    for i, kind in enumerate(pattern):
+        sub = _cast(gp[f"sub{i}"], cfg)
+        if kind == "rec":
+            d, ns[f"sub{i}"] = rec_block_step(sub["mix"], x,
+                                              gs[f"sub{i}"], cfg)
+            x = x + d
+        else:
+            h = rmsnorm_apply(sub["mix"]["norm"], x, eps=cfg.norm_eps,
+                              scale_offset=cfg.norm_scale_offset)
+            d, ns[f"sub{i}"] = attention_decode(
+                sub["mix"]["attn"], h, _attn_cfg(cfg),
+                cache=gs[f"sub{i}"], cur_pos=cur_pos)
+            x = x + d.astype(x.dtype)
+        x = x + _mlp_apply(sub["mlp"], x, cfg)
+    return x, ns
+
+
+def decode_step(params, state, tokens, cfg: RGLRUConfig, *, cur_pos):
+    x = embedding_apply(params["embed"], tokens, compute_dtype=cfg.cdtype())
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+
+    def group_fn(x, scanned):
+        gp, gs = scanned
+        return _step_group(gp, gs, x, cfg, cur_pos, cfg.pattern)
+
+    x, new_groups = jax.lax.scan(group_fn, x,
+                                 (params["layers"], state["groups"]))
+    new_state = {"groups": new_groups, "trailing": {}}
+    if cfg.num_trailing:
+        x, new_state["trailing"] = _step_group(
+            params["trailing"], state["trailing"], x, cfg, cur_pos,
+            cfg.pattern[:cfg.num_trailing])
+    x = rmsnorm_apply(params["final_norm"], x, eps=cfg.norm_eps,
+                      scale_offset=cfg.norm_scale_offset)
+    logits = embedding_attend(params["embed"], x, compute_dtype=cfg.cdtype())
+    return logits.astype(jnp.float32), new_state

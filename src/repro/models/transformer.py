@@ -1,0 +1,330 @@
+"""Decoder-only transformer family.
+
+One parameterized definition covers the dense GQA archs (minitron-8b,
+qwen3-8b, phi3-medium-14b, gemma-7b), the MoE archs (llama4-maverick /
+llama4-scout: top-1 MoE with shared expert, iRoPE 3-local:1-global attention
+pattern), and the VLM backbone (qwen2-vl-7b: M-RoPE + stub vision embeddings).
+
+Layers are grouped into scan units of ``cfg.group_size`` (the lcm of the
+MoE-period and attention-pattern period) so heterogeneous layer patterns
+remain scannable: per-group params are stacked on a leading ``num_groups``
+axis and the whole stack is traversed with one ``jax.lax.scan`` (bounded HLO,
+fast multi-pod compiles), with activation remat around each group.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (
+    TransformerConfig, softmax_cross_entropy, maybe_remat, constrain_act,
+    chunked_lm_loss)
+from repro.nn.attention import (
+    AttnConfig, attention_init, attention_apply, attention_decode,
+    init_kv_cache)
+from repro.nn.linear import (
+    dense_init, dense_apply, embedding_init, embedding_apply,
+    embedding_attend)
+from repro.nn.mlp import mlp_init, mlp_apply
+from repro.nn.moe import moe_init, moe_apply, router_load_balance_loss
+from repro.nn.norm import rmsnorm_init, rmsnorm_apply
+from repro.nn.rope import apply_rope  # noqa: F401 (re-export convenience)
+
+
+# --------------------------------------------------------------------------
+# config plumbing
+
+def _attn_cfg(cfg: TransformerConfig, window):
+    return AttnConfig(
+        d_model=cfg.d_model, num_heads=cfg.num_heads,
+        num_kv_heads=cfg.num_kv_heads, head_dim=cfg.head_dim,
+        qk_norm=cfg.qk_norm, use_bias=cfg.attn_bias,
+        rope_theta=cfg.rope_theta, mrope_sections=cfg.mrope_sections,
+        sliding_window=window, impl=cfg.attention_impl,
+        mesh_axes=cfg.mesh_axes)
+
+
+# --------------------------------------------------------------------------
+# init
+
+def _layer_init(key, cfg: TransformerConfig, kind):
+    ks = jax.random.split(key, 4)
+    dt = cfg.pdtype()
+    p = {
+        "attn_norm": rmsnorm_init(ks[0], cfg.d_model, dtype=dt),
+        "attn": attention_init(ks[1], _attn_cfg(cfg, kind["window"]),
+                               dtype=dt),
+        "mlp_norm": rmsnorm_init(ks[2], cfg.d_model, dtype=dt),
+    }
+    if kind["moe"]:
+        p["moe"] = moe_init(ks[3], cfg.d_model, cfg.d_ff, cfg.num_experts,
+                            shared_expert=cfg.moe_shared_expert, dtype=dt)
+    else:
+        gated = cfg.act in ("silu", "gelu")
+        dff = cfg.d_ff_dense or cfg.d_ff
+        p["mlp"] = mlp_init(ks[3], cfg.d_model, dff, gated=gated, dtype=dt)
+    return p
+
+
+def init(key, cfg: TransformerConfig):
+    G = cfg.group_size
+    assert cfg.num_layers % G == 0, (cfg.num_layers, G)
+    num_groups = cfg.num_layers // G
+    k_embed, k_norm, k_unembed, k_layers = jax.random.split(key, 4)
+    params = {
+        "embed": embedding_init(k_embed, cfg.vocab_size, cfg.d_model,
+                                dtype=cfg.pdtype()),
+        "final_norm": rmsnorm_init(k_norm, cfg.d_model, dtype=cfg.pdtype()),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = dense_init(k_unembed, cfg.d_model,
+                                       cfg.vocab_size, use_bias=False,
+                                       dtype=cfg.pdtype())
+
+    layer_keys = jax.random.split(k_layers, num_groups * G)
+
+    def one_group(g):
+        return {
+            f"sub{p}": _layer_init(layer_keys[g * G + p], cfg,
+                                   cfg.layer_kind(p))
+            for p in range(G)
+        }
+
+    groups = [one_group(g) for g in range(num_groups)]
+    params["layers"] = jax.tree_util.tree_map(
+        lambda *xs: jnp.stack(xs), *groups)
+    return params
+
+
+# --------------------------------------------------------------------------
+# forward
+
+def cast_for_compute(tree, cfg: TransformerConfig):
+    """Cast float params to the compute dtype (router weights stay fp32)."""
+    def leafcast(path, a):
+        if any(getattr(k, "key", None) == "router" for k in path):
+            return a
+        if jnp.issubdtype(a.dtype, jnp.floating):
+            return a.astype(cfg.cdtype())
+        return a
+    return jax.tree_util.tree_map_with_path(leafcast, tree)
+
+
+def _layer_apply(lp, x, cfg: TransformerConfig, kind, positions, training):
+    lp = cast_for_compute(lp, cfg)
+    h = rmsnorm_apply(lp["attn_norm"], x, eps=cfg.norm_eps,
+                      scale_offset=cfg.norm_scale_offset)
+    x = x + attention_apply(lp["attn"], h, _attn_cfg(cfg, kind["window"]),
+                            positions=positions)
+    h = rmsnorm_apply(lp["mlp_norm"], x, eps=cfg.norm_eps,
+                      scale_offset=cfg.norm_scale_offset)
+    aux_loss = jnp.zeros((), jnp.float32)
+    if kind["moe"]:
+        dp_groups = 1
+        if cfg.mesh_axes:
+            for a, n in cfg.mesh_axes:
+                if a != "model":
+                    dp_groups *= n
+        y, aux = moe_apply(lp["moe"], h, num_experts=cfg.num_experts,
+                           capacity_factor=cfg.capacity_factor, act=cfg.act,
+                           dp_groups=dp_groups, mesh_axes=cfg.mesh_axes)
+        if training and cfg.router_aux_coef:
+            aux_loss = router_load_balance_loss(
+                aux["router_logits"], aux["expert_id"], cfg.num_experts)
+    else:
+        y = mlp_apply(lp["mlp"], h, act=cfg.act)
+    return x + y, aux_loss
+
+
+def build_mrope_positions(batch, seq, vision_tokens):
+    """Deterministic M-RoPE ids for the stub-frontend layout
+    [text BOS][vision grid][text...]: vision tokens share t=1 and take (h, w)
+    grid ids; text ids advance all three streams together."""
+    gh = max(1, int(math.sqrt(max(vision_tokens, 1))))
+    gw = -(-vision_tokens // gh) if vision_tokens else 1
+    idx = jnp.arange(seq)
+    is_vis = (idx >= 1) & (idx < 1 + vision_tokens)
+    v = jnp.clip(idx - 1, 0, max(vision_tokens - 1, 0))
+    t_id = jnp.where(is_vis, 1, idx - jnp.where(idx >= 1 + vision_tokens,
+                                                vision_tokens - 1, 0))
+    h_id = jnp.where(is_vis, 1 + v // gw, t_id)
+    w_id = jnp.where(is_vis, 1 + v % gw, t_id)
+    pos = jnp.stack([t_id, h_id, w_id]).astype(jnp.int32)     # (3, S)
+    return jnp.broadcast_to(pos[:, None], (3, batch, seq))
+
+
+def _default_positions(cfg, batch, seq):
+    if cfg.mrope_sections is not None:
+        return build_mrope_positions(batch, seq, cfg.vision_tokens)
+    return jnp.broadcast_to(jnp.arange(seq, dtype=jnp.int32), (batch, seq))
+
+
+def embed_inputs(params, batch_in, cfg: TransformerConfig):
+    """Token embeddings with optional VLM stub-frontend merge."""
+    tokens = batch_in["tokens"]
+    B, S = tokens.shape
+    x = embedding_apply(params["embed"], tokens,
+                        compute_dtype=cfg.cdtype())
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    if cfg.vision_tokens:
+        ve = batch_in["vision_embeds"].astype(x.dtype)   # (B, Nv, d)
+        nv = ve.shape[1]
+        x = jax.lax.dynamic_update_slice(x, ve, (0, 1, 0))
+        del nv
+    return x
+
+
+def unembed(params, x, cfg: TransformerConfig):
+    if cfg.tie_embeddings:
+        logits = embedding_attend(params["embed"], x,
+                                  compute_dtype=cfg.cdtype())
+    else:
+        logits = dense_apply(params["unembed"], x,
+                             compute_dtype=cfg.cdtype())
+    if cfg.logit_softcap:
+        logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+    return constrain_act(logits, cfg, kind="logits")
+
+
+def forward(params, batch_in, cfg: TransformerConfig, *, training=True,
+            collector_perm=None, cut_groups=1, return_hidden=False,
+            last_token_only=False):
+    """batch_in: {tokens (B,S) [, vision_embeds (B,Nv,d)]} -> (logits, aux).
+
+    ``collector_perm``: SFPL's global-collector shuffle for split-LM
+    training — a permutation of the global batch applied to the smashed
+    data after the first ``cut_groups`` scan groups (the client-side model
+    portion). With the batch axis sharded over ("pod","data") the gather
+    lowers to all-to-all; its VJP is the de-shuffling scatter, so
+    Algorithm 1's gradient routing falls out of autodiff. Labels must be
+    permuted by the caller (see core.split_lm.sfpl_lm_loss).
+    """
+    tokens = batch_in["tokens"]
+    B, S = tokens.shape
+    x = constrain_act(embed_inputs(params, batch_in, cfg), cfg)
+    positions = batch_in.get("positions", _default_positions(cfg, B, S))
+    G = cfg.group_size
+
+    def group_fn(x, gp):
+        aux_total = jnp.zeros((), jnp.float32)
+        for p in range(G):
+            f = lambda x_, lp, p=p: _layer_apply(
+                lp, x_, cfg, cfg.layer_kind(p), positions, training)
+            if cfg.remat and training and G > 1:
+                f = jax.checkpoint(f)   # per-layer remat inside the group
+            x, aux = f(x, gp[f"sub{p}"])
+            aux_total = aux_total + aux
+        return constrain_act(x, cfg), aux_total
+
+    # remat policy: per-layer checkpoints inside multi-layer groups, one
+    # outer checkpoint when G == 1 — nesting both double-recomputes.
+    scan_body = maybe_remat(group_fn, cfg.remat and training and G == 1)
+    num_groups = cfg.num_layers // G
+
+    def run_groups(x, layer_params, lo, hi):
+        sliced = jax.tree_util.tree_map(lambda a: a[lo:hi], layer_params)
+        if cfg.scan_layers:
+            return jax.lax.scan(scan_body, x, sliced)
+        aux_loss = jnp.zeros((), jnp.float32)
+        for g in range(hi - lo):
+            gp = jax.tree_util.tree_map(lambda a, g=g: a[g], sliced)
+            x, aux = scan_body(x, gp)
+            aux_loss = aux_loss + aux
+        return x, aux_loss
+
+    if collector_perm is not None:
+        # client-side portion -> smashed data -> global collector shuffle
+        x, aux1 = run_groups(x, params["layers"], 0, cut_groups)
+        x = jnp.take(x, collector_perm, axis=0)
+        x, aux2 = run_groups(x, params["layers"], cut_groups, num_groups)
+        aux_loss = jnp.sum(aux1) + jnp.sum(aux2)
+    else:
+        x, aux = run_groups(x, params["layers"], 0, num_groups)
+        aux_loss = jnp.sum(aux)
+
+    x = rmsnorm_apply(params["final_norm"], x, eps=cfg.norm_eps,
+                      scale_offset=cfg.norm_scale_offset)
+    if last_token_only:
+        x = x[:, -1:]
+    if return_hidden:
+        return x, aux_loss
+    return unembed(params, x, cfg).astype(jnp.float32), aux_loss
+
+
+def loss_fn(params, batch_in, cfg: TransformerConfig, *, training=True):
+    hidden, aux_loss = forward(params, batch_in, cfg, training=training,
+                               return_hidden=True)
+    loss = chunked_lm_loss(hidden, batch_in["labels"],
+                           lambda xc: unembed(params, xc, cfg))
+    return loss + cfg.router_aux_coef * aux_loss, {"xent": loss,
+                                                   "aux": aux_loss}
+
+
+# --------------------------------------------------------------------------
+# decode (KV cache)
+
+def init_decode_state(cfg: TransformerConfig, batch, max_len,
+                      *, dtype=jnp.bfloat16):
+    """Stacked per-group KV caches. SWA layers get window-sized ring slots."""
+    G = cfg.group_size
+    num_groups = cfg.num_layers // G
+    cache = {}
+    for p in range(G):
+        kind = cfg.layer_kind(p)
+        slots = min(max_len, kind["window"] or max_len)
+        one = init_kv_cache(batch, slots, cfg.num_kv_heads, cfg.head_dim,
+                            dtype=dtype)
+        cache[f"sub{p}"] = jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a[None], (num_groups,) + a.shape),
+            one)
+    return cache
+
+
+def decode_step(params, state, tokens, cfg: TransformerConfig, *, cur_pos):
+    """tokens: (B, 1); state: cache pytree; cur_pos: scalar int32 position.
+
+    Returns (logits (B, 1, V), new_state)."""
+    B = tokens.shape[0]
+    x = embedding_apply(params["embed"], tokens, compute_dtype=cfg.cdtype())
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    G = cfg.group_size
+
+    def group_fn(x, scanned):
+        gp, gcache = scanned
+        new_cache = {}
+        for p in range(G):
+            lp = cast_for_compute(gp[f"sub{p}"], cfg)
+            kind = cfg.layer_kind(p)
+            h = rmsnorm_apply(lp["attn_norm"], x, eps=cfg.norm_eps,
+                              scale_offset=cfg.norm_scale_offset)
+            attn_out, new_cache[f"sub{p}"] = attention_decode(
+                lp["attn"], h, _attn_cfg(cfg, kind["window"]),
+                cache=gcache[f"sub{p}"], cur_pos=cur_pos)
+            x = x + attn_out
+            h = rmsnorm_apply(lp["mlp_norm"], x, eps=cfg.norm_eps,
+                              scale_offset=cfg.norm_scale_offset)
+            if kind["moe"]:
+                y, _ = moe_apply(lp["moe"], h, num_experts=cfg.num_experts,
+                                 capacity_factor=cfg.capacity_factor,
+                                 act=cfg.act)
+            else:
+                y = mlp_apply(lp["mlp"], h, act=cfg.act)
+            x = x + y
+        return x, new_cache
+
+    x, new_state = jax.lax.scan(group_fn, x, (params["layers"], state))
+    x = rmsnorm_apply(params["final_norm"], x, eps=cfg.norm_eps,
+                      scale_offset=cfg.norm_scale_offset)
+    if cfg.tie_embeddings:
+        logits = embedding_attend(params["embed"], x,
+                                  compute_dtype=cfg.cdtype())
+    else:
+        logits = dense_apply(params["unembed"], x,
+                             compute_dtype=cfg.cdtype())
+    if cfg.logit_softcap:
+        logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+    return logits.astype(jnp.float32), new_state

@@ -1,0 +1,542 @@
+"""xLSTM (arXiv:2405.04517): mLSTM + sLSTM residual blocks, 7:1 ratio.
+
+TPU adaptation notes (DESIGN.md §4): the paper's CUDA kernels are replaced by
+  * mLSTM — a **chunkwise-parallel** form (linear-attention style): the
+    sequence is split into chunks of ``chunk_len``; within a chunk the
+    stabilized quadratic form runs on the MXU, across chunks a (C, n, m)
+    matrix-memory state is carried through ``jax.lax.scan``. Memory is
+    O(S * chunk) instead of O(S^2), which is what makes prefill_32k and the
+    500k-token long-context shape lowerable.
+  * sLSTM — inherently sequential (hidden-to-hidden recurrence): a
+    ``lax.scan`` over time with per-head block-diagonal recurrent matrices.
+Decode carries per-layer recurrent states; there is no KV cache, so
+long_500k decode state is O(1) in sequence length.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (softmax_cross_entropy, maybe_remat,
+                                 constrain_act, chunked_lm_loss,
+                                 constrain_dims)
+from repro.nn.linear import (
+    dense_init, dense_apply, embedding_init, embedding_apply,
+    embedding_attend)
+from repro.nn.norm import rmsnorm_init, rmsnorm_apply
+from repro.nn.init import lecun_normal, normal_init, zeros_init
+
+
+@dataclasses.dataclass(frozen=True)
+class XLSTMConfig:
+    name: str = "xlstm"
+    num_layers: int = 48
+    d_model: int = 2048
+    num_heads: int = 4
+    vocab_size: int = 50304
+    proj_factor: float = 2.0        # mLSTM up-projection
+    slstm_ff_factor: float = 4.0 / 3.0
+    conv_kernel: int = 4
+    qkv_blocksize: int = 4          # block-diagonal qkv (official xlstm)
+    slstm_every: int = 8            # one sLSTM per 8 blocks (7:1)
+    chunk_len: int = 256
+    slstm_impl: str = "xla"        # "xla" | "pallas" | "pallas_interpret"
+    norm_eps: float = 1e-6
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    remat: bool = True
+    scan_layers: bool = True
+    mesh_axes: tuple = None   # see common.constrain_act
+
+    @property
+    def d_inner(self):
+        return int(self.d_model * self.proj_factor)
+
+    @property
+    def head_dim(self):
+        return self.d_inner // self.num_heads
+
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    def cdtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+
+# --------------------------------------------------------------------------
+# causal depthwise conv (kernel 4) with decode ring buffer
+
+def causal_conv_init(key, dim, kernel, dtype):
+    return {"w": normal_init(key, (kernel, dim), stddev=0.1, dtype=dtype),
+            "b": zeros_init(key, (dim,), dtype=dtype)}
+
+
+def causal_conv_apply(p, x):
+    """x: (B, S, D) depthwise causal conv."""
+    k = p["w"].shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(k):
+        out = out + xp[:, i:i + x.shape[1]] * p["w"][i].astype(x.dtype)
+    return out + p["b"].astype(x.dtype)
+
+
+def causal_conv_step(p, x_t, buf):
+    """x_t: (B, D); buf: (B, k-1, D) previous inputs. Returns (y, new_buf)."""
+    k = p["w"].shape[0]
+    window = jnp.concatenate([buf, x_t[:, None]], axis=1)       # (B, k, D)
+    y = jnp.einsum("bkd,kd->bd", window, p["w"].astype(x_t.dtype))
+    y = y + p["b"].astype(x_t.dtype)
+    return y, window[:, -(k - 1):]
+
+
+# --------------------------------------------------------------------------
+# mLSTM cell — chunkwise parallel + recurrent step
+
+def _mlstm_chunk_scan(q, k, v, i_pre, logf, *, chunk, mesh_axes=None):
+    """q,k,v: (B, H, S, D) (q pre-scaled); i_pre/logf: (B, H, S) fp32.
+
+    Returns h: (B, H, S, D). Chunkwise stabilized linear-attention form.
+    """
+    B, H, S, D = q.shape
+    assert S % chunk == 0, (S, chunk)
+    N = S // chunk
+    rs = lambda a: a.reshape(B, H, N, chunk, *a.shape[3:]).swapaxes(0, 2)
+    qc, kc, vc = rs(q), rs(k), rs(v)           # (N, H, B, chunk, D)
+    ic, fc = rs(i_pre), rs(logf)               # (N, H, B, chunk)
+
+    def chunk_fn(carry, xs):
+        C, n, m = carry                        # (H,B,D,D), (H,B,D), (H,B)
+        qj, kj, vj, ij, fj = xs
+        Bcum = jnp.cumsum(fj, axis=-1)                       # (H,B,L)
+        # intra-chunk exponents  D_ts = Bcum_t - Bcum_s + i_s  (s <= t)
+        Dmat = (Bcum[..., :, None] - Bcum[..., None, :] + ij[..., None, :])
+        L = Dmat.shape[-1]
+        tri = jnp.tril(jnp.ones((L, L), bool))
+        Dmat = jnp.where(tri, Dmat, -jnp.inf)
+        m_intra = jnp.max(Dmat, axis=-1)                     # (H,B,L)
+        m_inter = m[..., None] + Bcum                        # (H,B,L)
+        m_t = jnp.maximum(jnp.maximum(m_intra, m_inter), -1e30)
+
+        smat = jnp.einsum("hbtd,hbsd->hbts", qj.astype(jnp.float32),
+                          kj.astype(jnp.float32))
+        smat = smat * jnp.exp(Dmat - m_t[..., None])         # (H,B,t,s)
+        inter_scale = jnp.exp(m_inter - m_t)                 # (H,B,L)
+        h_num = (jnp.einsum("hbts,hbsd->hbtd", smat, vj.astype(jnp.float32))
+                 + jnp.einsum("hbtd,hbde->hbte", qj.astype(jnp.float32), C)
+                 * inter_scale[..., None])
+        denom = (jnp.sum(smat, axis=-1)
+                 + jnp.einsum("hbtd,hbd->hbt", qj.astype(jnp.float32), n)
+                 * inter_scale)
+        denom = jnp.maximum(jnp.abs(denom), jnp.exp(-m_t))
+        h = h_num / denom[..., None]
+
+        # state update to end of chunk
+        m_next = jnp.maximum(m + Bcum[..., -1],
+                             jnp.max(Bcum[..., -1:] - Bcum + ij, axis=-1))
+        w_state = jnp.exp(m + Bcum[..., -1] - m_next)        # (H,B)
+        w_tok = jnp.exp(Bcum[..., -1:] - Bcum + ij - m_next[..., None])
+        C_new = (C * w_state[..., None, None]
+                 + jnp.einsum("hbs,hbsd,hbse->hbde", w_tok,
+                              kj.astype(jnp.float32), vj.astype(jnp.float32)))
+        n_new = (n * w_state[..., None]
+                 + jnp.einsum("hbs,hbsd->hbd", w_tok, kj.astype(jnp.float32)))
+        # shard the (H,B,D,D) matrix memory: B over dp, and the OUTPUT
+        # (value) D dim over model — the query einsum contracts the first D,
+        # so sharding the second keeps the chunk scan communication-free
+        # (hypothesis log: sharding the contracted dim cost an all-gather of
+        # C per chunk iteration).
+        C_new = constrain_dims(C_new, mesh_axes, (None, "dp", None, "tp"))
+        n_new = constrain_dims(n_new, mesh_axes, (None, "dp", "tp"))
+        return (C_new, n_new, m_next), h
+
+    C0 = jnp.zeros((H, B, D, D), jnp.float32)
+    n0 = jnp.zeros((H, B, D), jnp.float32)
+    m0 = jnp.full((H, B), -1e30, jnp.float32)
+    _, hs = jax.lax.scan(chunk_fn, (C0, n0, m0), (qc, kc, vc, ic, fc))
+    h = hs.swapaxes(0, 2).reshape(B, H, S, D)
+    return h
+
+
+def mlstm_recurrent_step(state, q_t, k_t, v_t, i_pre, logf):
+    """One decode step. state: (C (B,H,D,D), n (B,H,D), m (B,H)) fp32;
+    q/k/v_t: (B,H,D) (q pre-scaled); i_pre/logf: (B,H)."""
+    C, n, m = state
+    m_new = jnp.maximum(logf + m, i_pre)
+    f_s = jnp.exp(logf + m - m_new)[..., None]
+    i_s = jnp.exp(i_pre - m_new)[..., None]
+    kf = k_t.astype(jnp.float32)
+    vf = v_t.astype(jnp.float32)
+    C_new = C * f_s[..., None] + i_s[..., None] * kf[..., :, None] \
+        * vf[..., None, :]
+    n_new = n * f_s + i_s * kf
+    qf = q_t.astype(jnp.float32)
+    h_num = jnp.einsum("bhd,bhde->bhe", qf, C_new)
+    denom = jnp.maximum(jnp.abs(jnp.sum(qf * n_new, -1)), jnp.exp(-m_new))
+    h = h_num / denom[..., None]
+    return (C_new, n_new, m_new), h
+
+
+# --------------------------------------------------------------------------
+# block-diagonal projection (official xlstm qkv_proj_blocksize)
+
+def blockdiag_init(key, dim, blocksize, dtype):
+    nb = dim // blocksize
+    return {"w": normal_init(key, (nb, blocksize, blocksize),
+                             stddev=1.0 / math.sqrt(blocksize), dtype=dtype)}
+
+
+def blockdiag_apply(p, x):
+    """x: (..., dim) -> block-diagonal linear, dim = nb * bs."""
+    nb, bs, _ = p["w"].shape
+    xs = x.reshape(x.shape[:-1] + (nb, bs))
+    y = jnp.einsum("...nb,nbc->...nc", xs, p["w"].astype(x.dtype))
+    return y.reshape(x.shape)
+
+
+# --------------------------------------------------------------------------
+# mLSTM block
+
+def mlstm_block_init(key, cfg: XLSTMConfig):
+    ks = jax.random.split(key, 9)
+    dt = cfg.pdtype()
+    di = cfg.d_inner
+    return {
+        "norm": rmsnorm_init(ks[0], cfg.d_model, dtype=dt),
+        "up_main": dense_init(ks[1], cfg.d_model, di, use_bias=False,
+                              dtype=dt),
+        "up_gate": dense_init(ks[2], cfg.d_model, di, use_bias=False,
+                              dtype=dt),
+        "conv": causal_conv_init(ks[3], di, cfg.conv_kernel, dt),
+        "wq": blockdiag_init(ks[4], di, cfg.qkv_blocksize, dt),
+        "wk": blockdiag_init(ks[5], di, cfg.qkv_blocksize, dt),
+        "wv": blockdiag_init(ks[6], di, cfg.qkv_blocksize, dt),
+        "gates": dense_init(ks[7], di, 2 * cfg.num_heads, use_bias=True,
+                            dtype=jnp.float32),
+        "head_norm": rmsnorm_init(ks[8], di, dtype=dt),
+        "down": dense_init(jax.random.fold_in(key, 99), di, cfg.d_model,
+                           use_bias=False, dtype=dt),
+    }
+
+
+def _mlstm_qkv_gates(p, x_in, cfg: XLSTMConfig, conv_out):
+    """Shared projection logic. conv_out: (B,S,di) post-conv activations."""
+    B, S, _ = conv_out.shape
+    H, D = cfg.num_heads, cfg.head_dim
+    q = blockdiag_apply(p["wq"], conv_out).reshape(B, S, H, D).transpose(0, 2, 1, 3)
+    k = blockdiag_apply(p["wk"], conv_out).reshape(B, S, H, D).transpose(0, 2, 1, 3)
+    v = blockdiag_apply(p["wv"], x_in).reshape(B, S, H, D).transpose(0, 2, 1, 3)
+    q = q / math.sqrt(D)
+    gates = dense_apply(p["gates"], conv_out.astype(jnp.float32))  # (B,S,2H)
+    i_pre = gates[..., :H].transpose(0, 2, 1)        # (B,H,S)
+    f_pre = gates[..., H:].transpose(0, 2, 1)
+    logf = jax.nn.log_sigmoid(f_pre)
+    return q, k, v, i_pre.astype(jnp.float32), logf.astype(jnp.float32)
+
+
+def mlstm_block_apply(p, x, cfg: XLSTMConfig):
+    """x: (B, S, d_model) -> (B, S, d_model) residual branch output."""
+    B, S, _ = x.shape
+    h = rmsnorm_apply(p["norm"], x, eps=cfg.norm_eps)
+    main = constrain_dims(dense_apply(p["up_main"], h), cfg.mesh_axes,
+                          ("dp", None, "tp"))
+    gate = constrain_dims(dense_apply(p["up_gate"], h), cfg.mesh_axes,
+                          ("dp", None, "tp"))
+    conv_out = jax.nn.silu(causal_conv_apply(p["conv"], main))
+    q, k, v, i_pre, logf = _mlstm_qkv_gates(p, main, cfg, conv_out)
+    # (B,H,S,D) -> chunk scan in fp32
+    hcell = _mlstm_chunk_scan(q, k, v, i_pre, logf,
+                              chunk=min(cfg.chunk_len, S),
+                              mesh_axes=cfg.mesh_axes)
+    hcell = hcell.transpose(0, 2, 1, 3).reshape(B, S, cfg.d_inner)
+    hcell = rmsnorm_apply(p["head_norm"], hcell.astype(x.dtype),
+                          eps=cfg.norm_eps)
+    out = dense_apply(p["down"], hcell * jax.nn.silu(gate))
+    return out.astype(x.dtype)
+
+
+def mlstm_block_step(p, x_t, state, cfg: XLSTMConfig):
+    """x_t: (B, 1, d). state: {conv_buf, C, n, m}. Returns (out, state)."""
+    B = x_t.shape[0]
+    h = rmsnorm_apply(p["norm"], x_t, eps=cfg.norm_eps)[:, 0]    # (B, d)
+    main = dense_apply(p["up_main"], h)
+    gate = dense_apply(p["up_gate"], h)
+    conv_y, new_buf = causal_conv_step(p["conv"], main, state["conv_buf"])
+    conv_out = jax.nn.silu(conv_y)
+    H, D = cfg.num_heads, cfg.head_dim
+    q = blockdiag_apply(p["wq"], conv_out).reshape(B, H, D) / math.sqrt(D)
+    k = blockdiag_apply(p["wk"], conv_out).reshape(B, H, D)
+    v = blockdiag_apply(p["wv"], main).reshape(B, H, D)
+    gates = dense_apply(p["gates"], conv_out.astype(jnp.float32))
+    i_pre = gates[..., :H].astype(jnp.float32)
+    logf = jax.nn.log_sigmoid(gates[..., H:]).astype(jnp.float32)
+    (C, n, m), hcell = mlstm_recurrent_step(
+        (state["C"], state["n"], state["m"]), q, k, v, i_pre, logf)
+    hcell = hcell.reshape(B, cfg.d_inner).astype(x_t.dtype)
+    hcell = rmsnorm_apply(p["head_norm"], hcell, eps=cfg.norm_eps)
+    out = dense_apply(p["down"], hcell * jax.nn.silu(gate))
+    return out[:, None].astype(x_t.dtype), \
+        {"conv_buf": new_buf, "C": C, "n": n, "m": m}
+
+
+def mlstm_state_init(cfg: XLSTMConfig, batch):
+    H, D = cfg.num_heads, cfg.head_dim
+    return {
+        "conv_buf": jnp.zeros((batch, cfg.conv_kernel - 1, cfg.d_inner),
+                              cfg.cdtype()),
+        "C": jnp.zeros((batch, H, D, D), jnp.float32),
+        "n": jnp.zeros((batch, H, D), jnp.float32),
+        "m": jnp.full((batch, H), -1e30, jnp.float32),
+    }
+
+
+# --------------------------------------------------------------------------
+# sLSTM block
+
+def slstm_block_init(key, cfg: XLSTMConfig):
+    ks = jax.random.split(key, 10)
+    dt = cfg.pdtype()
+    d = cfg.d_model
+    H = cfg.num_heads
+    Dh = d // H
+    dff = int(d * cfg.slstm_ff_factor)
+    p = {"norm": rmsnorm_init(ks[0], d, dtype=dt),
+         "head_norm": rmsnorm_init(ks[1], d, dtype=dt)}
+    for gi, g in enumerate(("i", "f", "z", "o")):
+        p[f"w_{g}"] = dense_init(ks[2 + gi], d, d, use_bias=True, dtype=dt)
+        p[f"r_{g}"] = normal_init(jax.random.fold_in(ks[6], gi),
+                                  (H, Dh, Dh), stddev=1.0 / math.sqrt(Dh),
+                                  dtype=dt)
+    p["ff_norm"] = rmsnorm_init(ks[7], d, dtype=dt)
+    p["ff_up"] = dense_init(ks[8], d, 2 * dff, use_bias=False, dtype=dt)
+    p["ff_down"] = dense_init(ks[9], dff, d, use_bias=False, dtype=dt)
+    return p
+
+
+def _slstm_cell_step(p, carry, x_pre, H, Dh):
+    """carry: (c, n, m, h) each (B, H, Dh) fp32 (m: (B,H,Dh));
+    x_pre: dict gate->(B, H, Dh) input preactivations."""
+    c, n, m, h = carry
+    rec = {g: jnp.einsum("bhd,hde->bhe", h,
+                         p[f"r_{g}"].astype(jnp.float32))
+           for g in ("i", "f", "z", "o")}
+    i_pre = x_pre["i"] + rec["i"]
+    f_pre = x_pre["f"] + rec["f"]
+    z = jnp.tanh(x_pre["z"] + rec["z"])
+    o = jax.nn.sigmoid(x_pre["o"] + rec["o"])
+    logf = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(logf + m, i_pre)
+    i_s = jnp.exp(i_pre - m_new)
+    f_s = jnp.exp(logf + m - m_new)
+    c_new = f_s * c + i_s * z
+    n_new = jnp.maximum(f_s * n + i_s, 1e-6)
+    h_new = o * (c_new / n_new)
+    return (c_new, n_new, m_new, h_new)
+
+
+def slstm_block_apply(p, x, cfg: XLSTMConfig):
+    """x: (B, S, d) -> (B, S, d). Sequential scan over time."""
+    B, S, d = x.shape
+    H = cfg.num_heads
+    Dh = d // H
+    hin = rmsnorm_apply(p["norm"], x, eps=cfg.norm_eps)
+    import os
+    _tp = None if os.environ.get("REPRO_SLSTM_NO_TP") else "tp"
+    pre = {g: constrain_dims(
+        dense_apply(p[f"w_{g}"], hin).astype(jnp.float32)
+        .reshape(B, S, H, Dh), cfg.mesh_axes, ("dp", None, None, _tp))
+        for g in ("i", "f", "z", "o")}
+
+    if cfg.slstm_impl in ("pallas", "pallas_interpret"):
+        # fused on-chip time loop (kernels/slstm_scan): state in VMEM,
+        # head-local layout, no per-step collectives
+        from repro.kernels.slstm_scan.ops import slstm_scan
+        R = jnp.stack([p[f"r_{g}"].astype(jnp.float32)
+                       for g in ("i", "f", "z", "o")])
+        hs_k = slstm_scan(pre["i"], pre["f"], pre["z"], pre["o"], R,
+                          interpret=(cfg.slstm_impl == "pallas_interpret"))
+        hcell = hs_k.reshape(B, S, d).astype(x.dtype)
+        hcell = rmsnorm_apply(p["head_norm"], hcell, eps=cfg.norm_eps)
+        out = x + hcell
+        hf = rmsnorm_apply(p["ff_norm"], out, eps=cfg.norm_eps)
+        up = dense_apply(p["ff_up"], hf)
+        a, b = jnp.split(up, 2, axis=-1)
+        ff = dense_apply(p["ff_down"], jax.nn.gelu(a) * b)
+        return (out + ff - x).astype(x.dtype)
+
+    def step(carry, xs):
+        new = _slstm_cell_step(p, carry, xs, H, Dh)
+        return new, new[3]
+
+    zero = jnp.zeros((B, H, Dh), jnp.float32)
+    carry0 = (zero, zero + 1e-6, zero - 1e30, zero)
+    xs = {g: pre[g].swapaxes(0, 1) for g in pre}      # (S, B, H, Dh)
+    _, hs = jax.lax.scan(step, carry0, xs)
+    hcell = hs.swapaxes(0, 1).reshape(B, S, d).astype(x.dtype)
+    hcell = rmsnorm_apply(p["head_norm"], hcell, eps=cfg.norm_eps)
+    out = x + hcell
+    # post-FFN (GeGLU, pf 4/3)
+    hf = rmsnorm_apply(p["ff_norm"], out, eps=cfg.norm_eps)
+    up = dense_apply(p["ff_up"], hf)
+    a, b = jnp.split(up, 2, axis=-1)
+    ff = dense_apply(p["ff_down"], jax.nn.gelu(a) * b)
+    return (out + ff - x).astype(x.dtype)   # return residual-branch delta
+
+
+def slstm_block_step(p, x_t, state, cfg: XLSTMConfig):
+    B = x_t.shape[0]
+    d = cfg.d_model
+    H = cfg.num_heads
+    Dh = d // H
+    hin = rmsnorm_apply(p["norm"], x_t, eps=cfg.norm_eps)[:, 0]
+    pre = {g: dense_apply(p[f"w_{g}"], hin).astype(jnp.float32)
+           .reshape(B, H, Dh) for g in ("i", "f", "z", "o")}
+    carry = (state["c"], state["n"], state["m"], state["h"])
+    c, n, m, h = _slstm_cell_step(p, carry, pre, H, Dh)
+    hcell = h.reshape(B, d).astype(x_t.dtype)
+    hcell = rmsnorm_apply(p["head_norm"], hcell, eps=cfg.norm_eps)
+    out = x_t[:, 0] + hcell
+    hf = rmsnorm_apply(p["ff_norm"], out, eps=cfg.norm_eps)
+    up = dense_apply(p["ff_up"], hf)
+    a, b = jnp.split(up, 2, axis=-1)
+    ff = dense_apply(p["ff_down"], jax.nn.gelu(a) * b)
+    delta = (out + ff - x_t[:, 0])[:, None]
+    return delta.astype(x_t.dtype), {"c": c, "n": n, "m": m, "h": h}
+
+
+def slstm_state_init(cfg: XLSTMConfig, batch):
+    H = cfg.num_heads
+    Dh = cfg.d_model // H
+    zero = jnp.zeros((batch, H, Dh), jnp.float32)
+    return {"c": zero, "n": zero + 1e-6, "m": zero - 1e30, "h": zero}
+
+
+# --------------------------------------------------------------------------
+# full model
+
+def init(key, cfg: XLSTMConfig):
+    G = cfg.slstm_every
+    assert cfg.num_layers % G == 0
+    num_groups = cfg.num_layers // G
+    ke, kl, kn = jax.random.split(key, 3)
+    params = {
+        "embed": embedding_init(ke, cfg.vocab_size, cfg.d_model,
+                                dtype=cfg.pdtype()),
+        "final_norm": rmsnorm_init(kn, cfg.d_model, dtype=cfg.pdtype()),
+    }
+    keys = jax.random.split(kl, num_groups * G)
+
+    def one_group(g):
+        gp = {}
+        for p_idx in range(G):
+            k = keys[g * G + p_idx]
+            if p_idx == G - 1:
+                gp[f"sub{p_idx}"] = slstm_block_init(k, cfg)
+            else:
+                gp[f"sub{p_idx}"] = mlstm_block_init(k, cfg)
+        return gp
+
+    groups = [one_group(g) for g in range(num_groups)]
+    params["layers"] = jax.tree_util.tree_map(
+        lambda *xs: jnp.stack(xs), *groups)
+    return params
+
+
+def _cast(tree, cfg):
+    return jax.tree_util.tree_map(
+        lambda a: a.astype(cfg.cdtype())
+        if jnp.issubdtype(a.dtype, jnp.floating) else a, tree)
+
+
+def unembed(params, x, cfg: XLSTMConfig):
+    logits = embedding_attend(params["embed"], x, compute_dtype=cfg.cdtype())
+    return constrain_act(logits, cfg, kind="logits")
+
+
+def forward(params, batch_in, cfg: XLSTMConfig, *, training=True,
+            return_hidden=False, last_token_only=False):
+    tokens = batch_in["tokens"]
+    x = embedding_apply(params["embed"], tokens, compute_dtype=cfg.cdtype())
+    G = cfg.slstm_every
+
+    def group_fn(x, gp):
+        def one(x_, lp, p_idx):
+            lp = _cast(lp, cfg)
+            if p_idx == G - 1:
+                return x_ + slstm_block_apply(lp, x_, cfg)
+            return x_ + mlstm_block_apply(lp, x_, cfg)
+
+        for p_idx in range(G):
+            f = (jax.checkpoint(lambda x_, lp, p=p_idx: one(x_, lp, p))
+                 if cfg.remat and training
+                 else (lambda x_, lp, p=p_idx: one(x_, lp, p)))
+            x = f(x, gp[f"sub{p_idx}"])
+        return constrain_act(x, cfg), None
+
+    body = group_fn   # per-block remat inside group_fn
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(body, x, params["layers"])
+    else:
+        num_groups = cfg.num_layers // G
+        for g in range(num_groups):
+            gp = jax.tree_util.tree_map(lambda a, g=g: a[g], params["layers"])
+            x, _ = body(x, gp)
+    x = rmsnorm_apply(params["final_norm"], x, eps=cfg.norm_eps)
+    if last_token_only:
+        x = x[:, -1:]
+    if return_hidden:
+        return x, jnp.zeros((), jnp.float32)
+    return unembed(params, x, cfg).astype(jnp.float32), \
+        jnp.zeros((), jnp.float32)
+
+
+def loss_fn(params, batch_in, cfg: XLSTMConfig, *, training=True):
+    hidden, _ = forward(params, batch_in, cfg, training=training,
+                        return_hidden=True)
+    loss = chunked_lm_loss(hidden, batch_in["labels"],
+                           lambda xc: unembed(params, xc, cfg))
+    return loss, {"xent": loss}
+
+
+def init_decode_state(cfg: XLSTMConfig, batch, max_len=None, *, dtype=None):
+    del max_len, dtype     # recurrent: state is O(1) in sequence length
+    G = cfg.slstm_every
+    num_groups = cfg.num_layers // G
+    state = {}
+    for p_idx in range(G):
+        if p_idx == G - 1:
+            one = slstm_state_init(cfg, batch)
+        else:
+            one = mlstm_state_init(cfg, batch)
+        state[f"sub{p_idx}"] = jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a[None], (num_groups,) + a.shape),
+            one)
+    return state
+
+
+def decode_step(params, state, tokens, cfg: XLSTMConfig, *, cur_pos=None):
+    del cur_pos  # recurrent models are position-free
+    x = embedding_apply(params["embed"], tokens, compute_dtype=cfg.cdtype())
+    G = cfg.slstm_every
+
+    def group_fn(x, scanned):
+        gp, gs = scanned
+        ns = {}
+        for p_idx in range(G):
+            lp = _cast(gp[f"sub{p_idx}"], cfg)
+            if p_idx == G - 1:
+                d, ns[f"sub{p_idx}"] = slstm_block_step(
+                    lp, x, gs[f"sub{p_idx}"], cfg)
+            else:
+                d, ns[f"sub{p_idx}"] = mlstm_block_step(
+                    lp, x, gs[f"sub{p_idx}"], cfg)
+            x = x + d
+        return x, ns
+
+    x, new_state = jax.lax.scan(group_fn, x, (params["layers"], state))
+    x = rmsnorm_apply(params["final_norm"], x, eps=cfg.norm_eps)
+    logits = embedding_attend(params["embed"], x, compute_dtype=cfg.cdtype())
+    return logits.astype(jnp.float32), new_state

@@ -1,0 +1,30 @@
+"""Functional neural-network substrate for repro.
+
+No flax/haiku in this environment: layers follow an explicit functional
+convention —
+
+    params = <layer>_init(key, ...)          # pytree of jnp arrays
+    out    = <layer>_apply(params, x, ...)   # pure function
+
+Stateful layers (BatchNorm) carry a separate ``state`` tree threaded through
+apply calls, never hidden inside params.
+"""
+
+from repro.nn.init import (
+    lecun_normal, he_normal, normal_init, zeros_init, ones_init, uniform_scaling
+)
+from repro.nn.linear import (
+    dense_init, dense_apply, embedding_init, embedding_apply, embedding_attend
+)
+from repro.nn.conv import conv2d_init, conv2d_apply
+from repro.nn.norm import (
+    batchnorm_init, batchnorm_apply,
+    layernorm_init, layernorm_apply,
+    rmsnorm_init, rmsnorm_apply,
+)
+from repro.nn.rope import rope_freqs, apply_rope, mrope_positions, apply_mrope
+from repro.nn.attention import (
+    attention_init, attention_apply, init_kv_cache, AttnConfig
+)
+from repro.nn.mlp import mlp_init, mlp_apply
+from repro.nn.moe import moe_init, moe_apply, router_load_balance_loss

@@ -1,0 +1,51 @@
+"""Parameter initializers (fan-based, matching common framework defaults)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def _fans(shape, in_axis=-2, out_axis=-1):
+    if len(shape) < 1:
+        return 1, 1
+    if len(shape) == 1:
+        return shape[0], shape[0]
+    receptive = 1
+    for i, s in enumerate(shape):
+        if i not in (in_axis % len(shape), out_axis % len(shape)):
+            receptive *= s
+    return shape[in_axis] * receptive, shape[out_axis] * receptive
+
+
+def lecun_normal(key, shape, dtype=jnp.float32, in_axis=-2, out_axis=-1):
+    fan_in, _ = _fans(shape, in_axis, out_axis)
+    std = math.sqrt(1.0 / max(fan_in, 1))
+    return (jax.random.normal(key, shape) * std).astype(dtype)
+
+
+def he_normal(key, shape, dtype=jnp.float32, in_axis=-2, out_axis=-1):
+    fan_in, _ = _fans(shape, in_axis, out_axis)
+    std = math.sqrt(2.0 / max(fan_in, 1))
+    return (jax.random.normal(key, shape) * std).astype(dtype)
+
+
+def normal_init(key, shape, stddev=0.02, dtype=jnp.float32):
+    return (jax.random.normal(key, shape) * stddev).astype(dtype)
+
+
+def zeros_init(key, shape, dtype=jnp.float32):
+    del key
+    return jnp.zeros(shape, dtype)
+
+
+def ones_init(key, shape, dtype=jnp.float32):
+    del key
+    return jnp.ones(shape, dtype)
+
+
+def uniform_scaling(key, shape, scale=1.0, dtype=jnp.float32):
+    fan_in, _ = _fans(shape)
+    lim = scale * math.sqrt(3.0 / max(fan_in, 1))
+    return jax.random.uniform(key, shape, minval=-lim, maxval=lim).astype(dtype)

@@ -1,0 +1,47 @@
+"""Dense and embedding layers."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import jax
+
+from repro.nn.init import lecun_normal, normal_init, zeros_init
+
+
+def dense_init(key, in_dim, out_dim, *, use_bias=True, dtype=jnp.float32,
+               init=lecun_normal):
+    kw, kb = jax.random.split(key)
+    p = {"w": init(kw, (in_dim, out_dim), dtype=dtype)}
+    if use_bias:
+        p["b"] = zeros_init(kb, (out_dim,), dtype=dtype)
+    return p
+
+
+def dense_apply(params, x, *, compute_dtype=None):
+    w = params["w"]
+    if compute_dtype is not None:
+        w = w.astype(compute_dtype)
+        x = x.astype(compute_dtype)
+    y = x @ w
+    if "b" in params:
+        y = y + params["b"].astype(y.dtype)
+    return y
+
+
+def embedding_init(key, vocab, dim, *, dtype=jnp.float32, stddev=0.02):
+    return {"table": normal_init(key, (vocab, dim), stddev=stddev, dtype=dtype)}
+
+
+def embedding_apply(params, ids, *, compute_dtype=None):
+    t = params["table"]
+    if compute_dtype is not None:
+        t = t.astype(compute_dtype)
+    return jnp.take(t, ids, axis=0)
+
+
+def embedding_attend(params, x, *, compute_dtype=None):
+    """Tied-unembedding: project features back to vocab logits."""
+    t = params["table"]
+    if compute_dtype is not None:
+        t = t.astype(compute_dtype)
+        x = x.astype(compute_dtype)
+    return x @ t.T

@@ -1,0 +1,36 @@
+"""Feed-forward blocks: SwiGLU / GeGLU / plain GELU-MLP (relu for resnet heads)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.linear import dense_init, dense_apply
+
+ACTS = {
+    "silu": jax.nn.silu,
+    "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+    "gelu_exact": lambda x: jax.nn.gelu(x, approximate=False),
+    "relu": jax.nn.relu,
+    "relu2": lambda x: jnp.square(jax.nn.relu(x)),   # nemotron/minitron
+}
+
+
+def mlp_init(key, d_model, d_ff, *, gated=True, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    p = {
+        "wi": dense_init(ks[0], d_model, d_ff, use_bias=False, dtype=dtype),
+        "wo": dense_init(ks[2], d_ff, d_model, use_bias=False, dtype=dtype),
+    }
+    if gated:
+        p["wg"] = dense_init(ks[1], d_model, d_ff, use_bias=False, dtype=dtype)
+    return p
+
+
+def mlp_apply(params, x, *, act="silu"):
+    """SwiGLU (act=silu) / GeGLU (act=gelu) when 'wg' present, else plain MLP."""
+    h = dense_apply(params["wi"], x)
+    if "wg" in params:
+        h = ACTS[act](dense_apply(params["wg"], x)) * h
+    else:
+        h = ACTS[act](h)
+    return dense_apply(params["wo"], h)

@@ -1,0 +1,96 @@
+"""Normalization layers.
+
+BatchNorm is central to the paper: its running statistics ("RMSD") vs
+current-batch statistics ("CMSD") distinction at inference, and its exclusion
+from FedAvg aggregation, are half of SFPL's contribution. Running statistics
+live in a separate ``state`` tree so aggregation policies can treat
+parameters and statistics independently.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.nn.init import ones_init, zeros_init
+
+# --------------------------------------------------------------------------
+# BatchNorm
+
+
+def batchnorm_init(key, dim, *, dtype=jnp.float32):
+    params = {"scale": ones_init(key, (dim,), dtype),
+              "bias": zeros_init(key, (dim,), dtype)}
+    state = {"mean": jnp.zeros((dim,), jnp.float32),
+             "var": jnp.ones((dim,), jnp.float32),
+             "count": jnp.zeros((), jnp.float32)}
+    return params, state
+
+
+def batchnorm_apply(params, state, x, *, training, momentum=0.9, eps=1e-5,
+                    use_running_stats=None):
+    """Returns (y, new_state).
+
+    ``use_running_stats`` controls the inference statistics source:
+      * True  -> RMSD (aggregated running mean/var)        [paper Table VI/VII]
+      * False -> CMSD (current test-batch mean/var)        [paper Table VIII]
+    Default at inference is RMSD; during training current-batch stats are
+    always used for normalization while the running stats are updated.
+    """
+    axes = tuple(range(x.ndim - 1))
+    if training:
+        mean = jnp.mean(x.astype(jnp.float32), axis=axes)
+        var = jnp.var(x.astype(jnp.float32), axis=axes)
+        new_state = {
+            "mean": momentum * state["mean"] + (1 - momentum) * mean,
+            "var": momentum * state["var"] + (1 - momentum) * var,
+            "count": state["count"] + 1.0,
+        }
+    else:
+        rmsd = True if use_running_stats is None else use_running_stats
+        if rmsd:
+            mean, var = state["mean"], state["var"]
+        else:  # CMSD: statistics of the batch under test
+            mean = jnp.mean(x.astype(jnp.float32), axis=axes)
+            var = jnp.var(x.astype(jnp.float32), axis=axes)
+        new_state = state
+    x32 = x.astype(jnp.float32)
+    y = (x32 - mean) * (1.0 / jnp.sqrt(var + eps))
+    y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(x.dtype), new_state
+
+
+# --------------------------------------------------------------------------
+# LayerNorm / RMSNorm
+
+
+def layernorm_init(key, dim, *, dtype=jnp.float32):
+    return {"scale": ones_init(key, (dim,), dtype),
+            "bias": zeros_init(key, (dim,), dtype)}
+
+
+def layernorm_apply(params, x, *, eps=1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) / jnp.sqrt(var + eps)
+    y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def rmsnorm_init(key, dim, *, dtype=jnp.float32):
+    return {"scale": ones_init(key, (dim,), dtype)}
+
+
+def rmsnorm_apply(params, x, *, eps=1e-6, use_kernel=False, scale_offset=0.0):
+    """RMSNorm. ``scale_offset=1.0`` gives the Gemma "(1+scale)" convention.
+
+    ``use_kernel`` routes through the Pallas kernel (interpret on CPU).
+    """
+    if use_kernel:
+        from repro.kernels.rmsnorm import ops as _ops
+        return _ops.rmsnorm(x, params["scale"], eps=eps,
+                            scale_offset=scale_offset)
+    x32 = x.astype(jnp.float32)
+    ms = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 / jnp.sqrt(ms + eps)
+    y = y * (params["scale"].astype(jnp.float32) + scale_offset)
+    return y.astype(x.dtype)

@@ -1,0 +1,55 @@
+"""Rotary position embeddings: standard RoPE and Qwen2-VL's M-RoPE.
+
+M-RoPE (multimodal RoPE, arXiv:2409.12191): head_dim channels are split into
+three sections (temporal, height, width); each section rotates with its own
+position id. For pure-text tokens all three ids are equal, recovering 1-D RoPE.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim, *, theta=10000.0):
+    """Inverse frequencies, shape (head_dim//2,) fp32."""
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)
+
+
+def _rotate(x, angles):
+    """x: (..., head_dim), angles: broadcastable (..., head_dim//2)."""
+    x32 = x.astype(jnp.float32)
+    x1, x2 = jnp.split(x32, 2, axis=-1)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    return jnp.concatenate([x1 * cos - x2 * sin,
+                            x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+def apply_rope(x, positions, *, theta=10000.0):
+    """x: (B, S, H, D); positions: (B, S) int32."""
+    inv = rope_freqs(x.shape[-1], theta=theta)            # (D/2,)
+    ang = positions.astype(jnp.float32)[..., None] * inv  # (B, S, D/2)
+    return _rotate(x, ang[:, :, None, :])                 # bcast over heads
+
+
+def mrope_positions(positions_3d):
+    """Identity helper kept for API symmetry; positions_3d: (3, B, S)."""
+    return positions_3d
+
+
+def apply_mrope(x, positions_3d, *, theta=1000000.0, sections=(16, 24, 24)):
+    """x: (B, S, H, D); positions_3d: (3, B, S) int32 (t, h, w ids).
+
+    ``sections`` are half-dim channel counts per (t,h,w); must sum to D/2.
+    """
+    half = x.shape[-1] // 2
+    assert sum(sections) == half, (sections, half)
+    inv = rope_freqs(x.shape[-1], theta=theta)            # (D/2,)
+    # per-channel section id: 0,0,..,1,1,..,2,2..
+    sec_id = jnp.repeat(jnp.arange(3), jnp.array(sections),
+                        total_repeat_length=half)         # (D/2,)
+    pos = positions_3d.astype(jnp.float32)                # (3, B, S)
+    # angles: pick the section's position stream per channel (one-hot select)
+    ang_all = pos[..., None] * inv                        # (3, B, S, D/2)
+    onehot = (jnp.arange(3)[:, None] == sec_id[None, :]).astype(jnp.float32)  # (3, D/2)
+    ang = jnp.einsum("kbsd,kd->bsd", ang_all, onehot)     # (B, S, D/2)
+    return _rotate(x, ang[:, :, None, :])

@@ -1,0 +1,2 @@
+from repro.optim.sgd import sgd_momentum, adamw
+from repro.optim.schedule import multistep_lr, constant_lr, cosine_lr

@@ -1,0 +1,33 @@
+"""Learning-rate schedules."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant_lr(lr):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def multistep_lr(base_lr, milestones, gamma):
+    """Paper setup: MultiStepLR, milestones in *steps* (convert epochs
+    upstream), multiplicative ``gamma`` at each milestone."""
+    ms = jnp.asarray(sorted(milestones), jnp.int32)
+
+    def fn(step):
+        n = jnp.sum(step >= ms)
+        return jnp.asarray(base_lr, jnp.float32) * (gamma ** n)
+
+    return fn
+
+
+def cosine_lr(base_lr, total_steps, *, warmup=0, min_ratio=0.1):
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+        prog = jnp.clip((step - warmup) / jnp.maximum(
+            total_steps - warmup, 1), 0.0, 1.0)
+        cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(
+            jnp.pi * prog))
+        return base_lr * warm * cos
+
+    return fn

@@ -1,0 +1,86 @@
+"""Optimizers (optax-style (init, update) pairs; no optax in container).
+
+The paper trains with SGD: lr 1e-1, momentum 0.9, weight decay 5e-4,
+MultiStepLR decay (gamma 2e-2 at epochs 60/120/160). SGD-momentum is also
+the default for giant-arch dry-runs (one state tensor — the memory-frugal
+choice the paper's IoT setting implies). AdamW is provided for LM training.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable     # (grads, opt_state, params, step) -> (new_p, new_s)
+
+
+def sgd_momentum(lr, *, momentum=0.9, weight_decay=0.0, nesterov=False,
+                 state_dtype=None):
+    """lr: float or schedule fn(step) -> float."""
+    lr_fn = lr if callable(lr) else (lambda step: lr)
+
+    def init(params):
+        return {"mu": jax.tree_util.tree_map(
+            lambda p: jnp.zeros_like(
+                p, dtype=state_dtype or p.dtype), params)}
+
+    def update(grads, state, params, step):
+        lr_t = lr_fn(step)
+
+        def upd(g, mu, p):
+            g = g.astype(jnp.float32)
+            if weight_decay:
+                g = g + weight_decay * p.astype(jnp.float32)
+            mu_new = momentum * mu.astype(jnp.float32) + g
+            d = (g + momentum * mu_new) if nesterov else mu_new
+            p_new = p.astype(jnp.float32) - lr_t * d
+            return p_new.astype(p.dtype), mu_new.astype(mu.dtype)
+
+        out = jax.tree_util.tree_map(upd, grads, state["mu"], params)
+        new_p = jax.tree_util.tree_map(lambda t: t[0], out,
+                                       is_leaf=lambda t: isinstance(t, tuple))
+        new_mu = jax.tree_util.tree_map(lambda t: t[1], out,
+                                        is_leaf=lambda t: isinstance(t, tuple))
+        return new_p, {"mu": new_mu}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr, *, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.0,
+          state_dtype=None):
+    lr_fn = lr if callable(lr) else (lambda step: lr)
+
+    def init(params):
+        z = lambda p: jnp.zeros_like(p, dtype=state_dtype or jnp.float32)
+        return {"m": jax.tree_util.tree_map(z, params),
+                "v": jax.tree_util.tree_map(z, params)}
+
+    def update(grads, state, params, step):
+        lr_t = lr_fn(step)
+        t = step.astype(jnp.float32) + 1.0
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m_new = b1 * m.astype(jnp.float32) + (1 - b1) * g
+            v_new = b2 * v.astype(jnp.float32) + (1 - b2) * g * g
+            mhat = m_new / (1 - b1 ** t)
+            vhat = v_new / (1 - b2 ** t)
+            d = mhat / (jnp.sqrt(vhat) + eps)
+            if weight_decay:
+                d = d + weight_decay * p.astype(jnp.float32)
+            p_new = p.astype(jnp.float32) - lr_t * d
+            return p_new.astype(p.dtype), m_new.astype(m.dtype), \
+                v_new.astype(v.dtype)
+
+        out = jax.tree_util.tree_map(upd, grads, state["m"], state["v"],
+                                     params)
+        pick = lambda i: jax.tree_util.tree_map(
+            lambda t: t[i], out, is_leaf=lambda t: isinstance(t, tuple))
+        return pick(0), {"m": pick(1), "v": pick(2)}
+
+    return Optimizer(init, update)

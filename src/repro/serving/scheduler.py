@@ -1,0 +1,117 @@
+"""Continuous-batching serving scheduler (vLLM-style slot management).
+
+A fixed pool of B decode slots runs one jitted decode step per tick with a
+*per-slot* position vector (repro.nn.attention supports vector ``cur_pos``).
+Requests join whenever a slot frees up — prompt tokens are teacher-forced
+through the same decode path (per-slot, so other slots keep generating
+while one slot is still prefilling), and completed requests leave without
+stalling the batch. Greedy or temperature sampling per slot.
+
+This is the serving-side integration of the split-learning deployment: in
+the SFPL setting the client-side portion runs on-device and ships smashed
+activations; here the server-side decode pool is the natural continuation
+(DESIGN.md §5 notes the cut; serving uses the full model for simplicity).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.steps import make_decode_step
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: list                   # token ids
+    max_new_tokens: int = 16
+    temperature: float = 0.0
+    # filled by the scheduler:
+    output: Optional[list] = None
+    slot: Optional[int] = None
+
+
+class ContinuousBatcher:
+    """Slot-pool scheduler over a transformer-family decode step."""
+
+    def __init__(self, spec, cfg, params, *, num_slots=4, max_len=128,
+                 seed=0):
+        assert spec.family == "transformer", "scheduler targets LM decode"
+        self.spec, self.cfg, self.params = spec, cfg, params
+        self.B = num_slots
+        self.max_len = max_len
+        self.key = jax.random.PRNGKey(seed)
+        self._decode = jax.jit(make_decode_step(spec, cfg))
+        self.state = spec.model.init_decode_state(cfg, num_slots, max_len,
+                                                  dtype=jnp.float32)
+        # per-slot bookkeeping (host side)
+        self.pos = [0] * num_slots          # next position to write
+        self.active: List[Optional[Request]] = [None] * num_slots
+        self.pending: List[Request] = []
+        self.done: List[Request] = []
+        self._next_tok = [0] * num_slots    # token to feed this tick
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request):
+        req.output = []
+        self.pending.append(req)
+
+    def _admit(self):
+        for s in range(self.B):
+            if self.active[s] is None and self.pending:
+                req = self.pending.pop(0)
+                req.slot = s
+                self.active[s] = req
+                self.pos[s] = 0
+                self._next_tok[s] = req.prompt[0]
+                # recycle: mark every cached position of this slot invalid
+                self.state = self._invalidate_slot(self.state, s)
+
+    def _invalidate_slot(self, state, s):
+        def inv(path, a):
+            name = str(path[-1].key) if hasattr(path[-1], "key") else ""
+            if name == "pos":
+                return a.at[:, s].set(-1)
+            return a
+        return jax.tree_util.tree_map_with_path(inv, state)
+
+    # ------------------------------------------------------------------
+    def step(self):
+        """One decode tick for all slots. Returns number of active slots."""
+        self._admit()
+        if not any(self.active):
+            return 0
+        toks = jnp.asarray([[self._next_tok[s]] for s in range(self.B)],
+                           jnp.int32)
+        cur = jnp.asarray(self.pos, jnp.int32)
+        logits, self.state = self._decode(self.params, self.state, toks,
+                                          cur)
+        self.key, ks = jax.random.split(self.key)
+        greedy = jnp.argmax(logits[:, -1], axis=-1)
+        sampled = jax.random.categorical(ks, logits[:, -1] / 0.8)
+
+        for s in range(self.B):
+            req = self.active[s]
+            if req is None:
+                continue
+            self.pos[s] += 1
+            if self.pos[s] < len(req.prompt):
+                # still prefilling: feed the next prompt token
+                self._next_tok[s] = req.prompt[self.pos[s]]
+                continue
+            tok = int(sampled[s] if req.temperature > 0 else greedy[s])
+            req.output.append(tok)
+            self._next_tok[s] = tok
+            if (len(req.output) >= req.max_new_tokens
+                    or self.pos[s] >= self.max_len - 1):
+                self.done.append(req)
+                self.active[s] = None
+
+    def run(self, max_ticks=10_000):
+        ticks = 0
+        while (self.pending or any(self.active)) and ticks < max_ticks:
+            self.step()
+            ticks += 1
+        return self.done, ticks

@@ -1,0 +1,202 @@
+"""Sharding rules: param/batch/state pytrees -> PartitionSpecs.
+
+Scheme ("2D FSDP + TP", MaxText-style):
+  * batch / client axis      -> ("pod", "data")  (SFPL: data shards = client
+                                groups; the collector all-to-all runs here)
+  * tensor-parallel dims     -> "model" (attention heads, MLP hidden,
+                                MoE experts, vocab)
+  * FSDP dim                 -> "data" (the remaining large param dim;
+                                params are replicated across pods — weight
+                                all-gathers stay on intra-pod ICI)
+  * layer-scan leading dims  -> replicated
+
+Every assignment is divisibility-checked against the mesh: a dim that the
+axis does not divide falls back to replicated (recorded by the dry-run so
+the roofline report can flag it).
+"""
+from __future__ import annotations
+
+import re
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+DP_AXES = ("pod", "data")    # batch axis ("pod" absent on single-pod mesh)
+TP_AXIS = "model"
+FSDP_AXIS = "data"
+
+
+def _names(path):
+    out = []
+    for k in path:
+        if hasattr(k, "key"):
+            out.append(str(k.key))
+        elif hasattr(k, "idx"):
+            out.append(str(k.idx))
+        else:
+            out.append(str(k))
+    return "/".join(out)
+
+
+# (regex on the joined path, spec template applied to the TRAILING dims).
+# Templates use tokens: "tp" -> model axis, "fsdp" -> data axis, None.
+import os
+if os.environ.get("REPRO_MOE_EP") == "data":
+    _MOE_RULES = [
+        (r"moe/(wi|wg)$",                    ("fsdp", None, "tp")),
+        (r"moe/wo$",                         ("fsdp", "tp", None)),
+    ]
+else:
+    _MOE_RULES = [
+        (r"moe/(wi|wg)$",                    ("tp", "fsdp", None)),
+        (r"moe/wo$",                         ("tp", None, "fsdp")),
+    ]
+
+_RULES = _MOE_RULES + [
+    (r"router/w$",                           (None, None)),
+    (r"(wq|wk|wv)/w$",                       ("fsdp", "tp")),
+    (r"(embed|pos_embed)/table$",            ("tp", "fsdp")),
+    (r"unembed/w$",                          ("fsdp", "tp")),
+    (r"(wo|down|ff_down)/w$",                ("tp", "fsdp")),
+    (r"(wi|wg|up|up_main|up_gate|ff_up)/w$", ("fsdp", "tp")),
+    (r"w_[rizfo]/w$",                        ("fsdp", "tp")),
+    (r"(wq|wk|wv)/b$",                       ("tp",)),
+    (r"gates/w$",                            ("fsdp", None)),
+    (r"lambda$",                             ("tp",)),
+]
+
+
+def _axis_sizes(mesh):
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def _resolve(template, shape, sizes, has_pod, fsdp=True):
+    spec = []
+    for tok, dim in zip(template, shape):
+        if tok is None:
+            spec.append(None)
+        elif tok == "tp":
+            spec.append(TP_AXIS if dim % sizes[TP_AXIS] == 0 else None)
+        elif tok == "fsdp":
+            spec.append(FSDP_AXIS if fsdp and dim % sizes[FSDP_AXIS] == 0
+                        else None)
+        else:
+            spec.append(None)
+    return spec
+
+
+def spec_for_param(path, leaf_shape, mesh, *, fsdp=True):
+    """PartitionSpec for one param leaf."""
+    name = _names(path)
+    sizes = _axis_sizes(mesh)
+    has_pod = "pod" in sizes
+    # xlstm block-diagonal qkv: trailing (num_blocks, bs, bs) with tiny bs
+    if re.search(r"(wq|wk|wv)/w$", name) and len(leaf_shape) >= 3 \
+            and leaf_shape[-1] == leaf_shape[-2] and leaf_shape[-1] <= 16:
+        lead = len(leaf_shape) - 3
+        spec = [None] * lead + _resolve(("tp", None, None),
+                                        leaf_shape[lead:], sizes, has_pod,
+                                        fsdp)
+        return P(*spec)
+    for pattern, template in _RULES:
+        if not re.search(pattern, name):
+            continue
+        nd = len(template)
+        if len(leaf_shape) < nd:
+            continue
+        lead = len(leaf_shape) - nd
+        spec = [None] * lead + _resolve(template, leaf_shape[lead:], sizes,
+                                        has_pod, fsdp)
+        return P(*spec)
+    return P()   # replicate (norms, biases, convs, small tensors)
+
+
+def param_shardings(param_shapes, mesh, *, fsdp=True):
+    """Map a pytree of ShapeDtypeStructs -> pytree of NamedSharding.
+
+    ``fsdp=False`` replicates the FSDP dims over "data" (pure TP) — a perf
+    experiment knob: trades param memory for fewer weight collectives."""
+    def one(path, leaf):
+        return jax.sharding.NamedSharding(
+            mesh, spec_for_param(path, leaf.shape, mesh, fsdp=fsdp))
+    return jax.tree_util.tree_map_with_path(one, param_shapes)
+
+
+# --------------------------------------------------------------------------
+# batch / decode-state shardings
+
+def _dp(mesh):
+    sizes = _axis_sizes(mesh)
+    return tuple(a for a in DP_AXES if a in sizes)
+
+
+def batch_shardings(batch_shapes, mesh):
+    """Shard the leading batch dim over ("pod","data"); if batch is not
+    divisible (long_500k batch=1), shard the sequence dim over "data"."""
+    sizes = _axis_sizes(mesh)
+    dp = _dp(mesh)
+    dp_size = 1
+    for a in dp:
+        dp_size *= sizes[a]
+
+    def one(path, leaf):
+        shape = leaf.shape
+        spec = [None] * len(shape)
+        if len(shape) >= 1 and shape[0] % dp_size == 0 and shape[0] > 1:
+            spec[0] = dp
+        elif len(shape) >= 2 and shape[1] % sizes["data"] == 0:
+            spec[1] = "data"      # sequence sharding fallback
+        return jax.sharding.NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, batch_shapes)
+
+
+def state_shardings(state_shapes, mesh):
+    """Decode caches / recurrent states.
+
+    KV cache (B, slots, K, D): batch over dp when divisible; otherwise the
+    slots axis is sharded over "data" (sequence-sharded cache — distributed
+    "ring decode"). kv-head dim over "model" when divisible. Leading stacked
+    layer dims are skipped automatically (detected as dims preceding the
+    recognised suffix)."""
+    sizes = _axis_sizes(mesh)
+    dp = _dp(mesh)
+    dp_size = 1
+    for a in dp:
+        dp_size *= sizes[a]
+
+    def one(path, leaf):
+        name = _names(path)
+        shape = leaf.shape
+        spec = [None] * len(shape)
+        # find batch-like dim: for cache leaves under k/v/pos the layout is
+        # ([layers...], B, slots, K, D) / ([layers...], B, slots)
+        if re.search(r"(^|/)(k|v)$", name) and len(shape) >= 4:
+            b, sl, kh = len(shape) - 4, len(shape) - 3, len(shape) - 2
+            if shape[b] % dp_size == 0 and shape[b] > 1:
+                spec[b] = dp
+            elif shape[sl] % sizes["data"] == 0:
+                spec[sl] = "data"
+            if shape[kh] % sizes[TP_AXIS] == 0:
+                spec[kh] = TP_AXIS
+            elif spec[sl] is None and shape[sl] % sizes[TP_AXIS] == 0:
+                # kv heads not TP-divisible: shard cache slots over model
+                spec[sl] = TP_AXIS
+        elif re.search(r"(^|/)pos$", name) and len(shape) >= 2:
+            b, sl = len(shape) - 2, len(shape) - 1
+            if shape[b] % dp_size == 0 and shape[b] > 1:
+                spec[b] = dp
+            if shape[sl] % sizes[TP_AXIS] == 0:
+                spec[sl] = TP_AXIS
+            elif spec[b] is None and shape[sl] % sizes["data"] == 0:
+                spec[sl] = "data"
+        else:
+            # recurrent states ([groups], B, ...): first dp-divisible dim
+            # is the batch; everything else replicated (states are small)
+            for i, d in enumerate(shape):
+                if d > 1 and d % dp_size == 0:
+                    spec[i] = dp
+                    break
+        return jax.sharding.NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, state_shapes)

@@ -1,0 +1,117 @@
+"""Per-architecture smoke tests: reduced variant of each assigned config
+(<=2-ish layers, d_model<=512, <=4 experts), one forward + one train step on
+CPU, asserting output shapes and no NaNs; plus a decode step where the
+architecture supports decoding."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_arch, list_archs
+from repro.launch.steps import make_train_step, make_decode_step
+from repro.optim import sgd_momentum
+
+ARCHS = list_archs()
+
+
+def _batch_for(spec, cfg, key, batch=2, seq=16):
+    toks = jax.random.randint(key, (batch, seq), 0, cfg.vocab_size)
+    b = {"tokens": toks, "labels": toks}
+    if spec.family == "whisper":
+        b["frame_embeds"] = jax.random.normal(
+            key, (batch, 8, cfg.d_model), jnp.float32)
+    if getattr(cfg, "vision_tokens", 0):
+        b["vision_embeds"] = jax.random.normal(
+            key, (batch, cfg.vision_tokens, cfg.d_model))
+    return b
+
+
+@pytest.mark.parametrize("arch_id", ARCHS)
+def test_smoke_forward_shapes_and_finite(arch_id):
+    spec = get_arch(arch_id)
+    cfg = spec.make_smoke_config()
+    assert cfg.d_model <= 512
+    key = jax.random.PRNGKey(0)
+    params = spec.model.init(key, cfg)
+    batch = _batch_for(spec, cfg, key, batch=2, seq=16)
+    logits, aux = spec.model.forward(params, batch, cfg, training=False)
+    expect_seq = batch["tokens"].shape[1]
+    assert logits.shape == (2, expect_seq, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all()), arch_id
+
+
+@pytest.mark.parametrize("arch_id", ARCHS)
+def test_smoke_train_step(arch_id):
+    spec = get_arch(arch_id)
+    cfg = spec.make_smoke_config()
+    key = jax.random.PRNGKey(1)
+    params = spec.model.init(key, cfg)
+    opt = sgd_momentum(1e-2, momentum=0.9)
+    opt_state = opt.init(params)
+    step_fn = jax.jit(make_train_step(spec, cfg, opt))
+    batch = _batch_for(spec, cfg, key, batch=2, seq=16)
+    new_params, new_opt, step, loss = step_fn(
+        params, opt_state, jnp.zeros((), jnp.int32), batch)
+    assert bool(jnp.isfinite(loss)), arch_id
+    assert int(step) == 1
+    # params actually changed
+    diff = sum(float(jnp.sum(jnp.abs(a.astype(jnp.float32)
+                                     - b.astype(jnp.float32))))
+               for a, b in zip(jax.tree_util.tree_leaves(new_params),
+                               jax.tree_util.tree_leaves(params)))
+    assert diff > 0.0
+    finite = all(bool(jnp.isfinite(x.astype(jnp.float32)).all())
+                 for x in jax.tree_util.tree_leaves(new_params))
+    assert finite, arch_id
+
+
+@pytest.mark.parametrize("arch_id", ARCHS)
+def test_smoke_decode_step(arch_id):
+    spec = get_arch(arch_id)
+    cfg = spec.make_smoke_config()
+    key = jax.random.PRNGKey(2)
+    params = spec.model.init(key, cfg)
+    B, max_len = 2, 8
+    if spec.family == "xlstm":
+        state = spec.model.init_decode_state(cfg, B)
+    elif spec.family == "whisper":
+        frames = jax.random.normal(key, (B, 8, cfg.d_model))
+        enc = spec.model.encode(params, frames, cfg, training=False)
+        state = spec.model.init_decode_state(cfg, B, max_len,
+                                             dtype=jnp.float32,
+                                             enc_frames=8)
+        state = spec.model.prefill_cross(params, enc, state, cfg)
+    else:
+        state = spec.model.init_decode_state(cfg, B, max_len,
+                                             dtype=jnp.float32)
+    decode = jax.jit(make_decode_step(spec, cfg))
+    toks = jax.random.randint(key, (B, 1), 0, cfg.vocab_size)
+    logits, new_state = decode(params, state, toks, jnp.int32(0))
+    assert logits.shape == (B, 1, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all()), arch_id
+
+
+def test_all_ten_archs_registered():
+    assert len(ARCHS) == 10
+    expected = {
+        "minitron-8b", "qwen3-8b", "qwen2-vl-7b", "phi3-medium-14b",
+        "gemma-7b", "xlstm-1.3b", "whisper-large-v3",
+        "llama4-maverick-400b-a17b", "recurrentgemma-9b",
+        "llama4-scout-17b-a16e"}
+    assert set(ARCHS) == expected
+
+
+@pytest.mark.parametrize("arch_id,params_b", [
+    ("minitron-8b", 7.7), ("qwen3-8b", 8.2), ("qwen2-vl-7b", 7.6),
+    ("phi3-medium-14b", 14.7), ("gemma-7b", 8.5), ("xlstm-1.3b", 1.4),
+    ("whisper-large-v3", 1.5), ("llama4-maverick-400b-a17b", 400.7),
+    ("recurrentgemma-9b", 9.4), ("llama4-scout-17b-a16e", 107.8)])
+def test_full_config_param_counts(arch_id, params_b):
+    """Full-size configs match their model cards (checked via eval_shape —
+    no allocation)."""
+    import math
+    spec = get_arch(arch_id)
+    cfg = spec.make_config()
+    shapes = jax.eval_shape(
+        lambda: spec.model.init(jax.random.PRNGKey(0), cfg))
+    n = sum(math.prod(x.shape) for x in jax.tree_util.tree_leaves(shapes))
+    assert abs(n / 1e9 - params_b) / params_b < 0.03, n / 1e9

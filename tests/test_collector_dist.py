@@ -1,0 +1,67 @@
+"""Explicit shard_map collector: run in a subprocess with 8 host devices
+(the device count must be fixed before jax initializes, so these tests
+spawn a worker script)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+WORKER = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.core.collector_dist import shuffle_shard_map, make_balanced_perm
+from repro.core.collector import inverse_permutation
+
+mesh = jax.make_mesh((8,), ("data",))
+N, D = 64, 5
+key = jax.random.PRNGKey(0)
+x = jax.random.normal(key, (N, D))
+xs = jax.device_put(x, jax.sharding.NamedSharding(mesh, P("data")))
+
+# uniform random permutation (slack buffer covers imbalance)
+perm = jax.random.permutation(jax.random.fold_in(key, 1), N)
+out = shuffle_shard_map(xs, perm, mesh=mesh, slack=8.0)
+np.testing.assert_allclose(np.asarray(out), np.asarray(x)[np.asarray(perm)],
+                           rtol=1e-6)
+print("uniform-perm OK")
+
+# balanced permutation is drop-free at slack=1
+bperm = make_balanced_perm(jax.random.fold_in(key, 2), N, 8)
+assert sorted(np.asarray(bperm).tolist()) == list(range(N))
+out2 = shuffle_shard_map(xs, bperm, mesh=mesh, slack=1.0)
+np.testing.assert_allclose(np.asarray(out2),
+                           np.asarray(x)[np.asarray(bperm)], rtol=1e-6)
+print("balanced-perm OK")
+
+# de-shuffle = shuffle with the inverse permutation
+back = shuffle_shard_map(out2, inverse_permutation(bperm), mesh=mesh,
+                         slack=1.0)
+np.testing.assert_allclose(np.asarray(back), np.asarray(x), rtol=1e-6)
+print("deshuffle OK")
+
+# balanced perm mixes shards: every output shard must hold rows from
+# every source shard (the IID-simulation property)
+src_shard = np.asarray(bperm) // 8
+for s in range(8):
+    got = set(src_shard[s * 8:(s + 1) * 8].tolist())
+    assert len(got) == 8, (s, got)
+print("mixing OK")
+"""
+
+
+@pytest.mark.parametrize("_", [0])
+def test_shard_map_collector(_, tmp_path):
+    script = tmp_path / "worker.py"
+    script.write_text(WORKER)
+    env = dict(os.environ,
+               PYTHONPATH=os.path.abspath("src") + os.pathsep
+               + os.environ.get("PYTHONPATH", ""))
+    res = subprocess.run([sys.executable, str(script)], env=env,
+                         capture_output=True, text=True, timeout=420)
+    assert res.returncode == 0, res.stdout + res.stderr
+    for token in ("uniform-perm OK", "balanced-perm OK", "deshuffle OK",
+                  "mixing OK"):
+        assert token in res.stdout, res.stdout

@@ -1,0 +1,246 @@
+"""SFPL core invariants: collector, BN policy, round engines."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import collector as C
+from repro.core.bn_policy import fedavg, aggregate_bn_state, is_bn_path
+from repro.core import engine as E
+from repro.core.evaluate import (
+    evaluate_split_iid, evaluate_split_noniid, weight_divergence)
+from repro.data import make_synthetic_cifar, partition_positive_labels
+from repro.models import resnet as R
+from repro.optim import sgd_momentum
+
+
+# --------------------------------------------------------------------------
+# collector properties
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(2, 64))
+def test_shuffle_deshuffle_inverse(n):
+    key = jax.random.PRNGKey(n)
+    x = jax.random.normal(key, (n, 5))
+    perm = C.make_permutation(jax.random.fold_in(key, 1), n)
+    tree = {"a": x, "y": jnp.arange(n)}
+    shuf = C.shuffle(tree, perm)
+    back = C.deshuffle(shuf, perm)
+    np.testing.assert_array_equal(np.asarray(back["a"]), np.asarray(x))
+    np.testing.assert_array_equal(np.asarray(back["y"]), np.arange(n))
+
+
+def test_collect_uncollect_roundtrip():
+    x = jnp.arange(24).reshape(4, 6)   # 4 clients x 6 samples
+    pooled = C.collect({"x": x})
+    assert pooled["x"].shape == (24,)
+    back = C.uncollect(pooled, 4)
+    np.testing.assert_array_equal(np.asarray(back["x"]), np.asarray(x))
+
+
+def test_collector_shuffle_is_differentiable_routing():
+    """VJP of the collector gather must route gradients back to the source
+    rows (the de-shuffle of Algorithm 1)."""
+    x = jnp.eye(4)
+    perm = jnp.array([2, 0, 3, 1])
+
+    def f(x):
+        return jnp.sum(C.distributed_shuffle(x, perm) * jnp.arange(4.0)[:, None])
+
+    g = jax.grad(f)(x)
+    # row perm[i]=j of x receives weight i
+    expected = np.zeros((4, 4))
+    for i, j in enumerate([2, 0, 3, 1]):
+        expected[j] = i
+    np.testing.assert_allclose(np.asarray(g), expected)
+
+
+def test_global_collector_pool_and_return():
+    coll = C.GlobalCollector(num_clients=3)
+    key = jax.random.PRNGKey(0)
+    acts = jax.random.normal(key, (3, 4, 7))     # (N, B, feat)
+    labels = jnp.tile(jnp.arange(3)[:, None], (1, 4))
+    a_shuf, y_shuf, perm = coll.shuffle_pool(key, acts, labels)
+    assert a_shuf.shape == (12, 7)
+    # de-shuffled gradients return as (N, B, feat) with exact routing
+    grads = C.deshuffle({"g": a_shuf}, perm)["g"]
+    np.testing.assert_allclose(np.asarray(grads.reshape(3, 4, 7)),
+                               np.asarray(acts), rtol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# BN aggregation policy
+
+def _stacked_params():
+    return {
+        "conv1": {"w": jnp.stack([jnp.ones((2, 2)), 3 * jnp.ones((2, 2))])},
+        "bn1": {"scale": jnp.stack([jnp.ones(2), 3 * jnp.ones(2)]),
+                "bias": jnp.stack([jnp.zeros(2), jnp.ones(2)])},
+    }
+
+
+def test_fedavg_excludes_bn():
+    out = fedavg(_stacked_params(), exclude_bn=True)
+    np.testing.assert_allclose(np.asarray(out["conv1"]["w"][0]),
+                               2 * np.ones((2, 2)))   # averaged
+    np.testing.assert_allclose(np.asarray(out["bn1"]["scale"][0]),
+                               np.ones(2))            # kept local
+    np.testing.assert_allclose(np.asarray(out["bn1"]["scale"][1]),
+                               3 * np.ones(2))
+
+
+def test_fedavg_includes_bn_when_not_excluded():
+    out = fedavg(_stacked_params(), exclude_bn=False)
+    np.testing.assert_allclose(np.asarray(out["bn1"]["scale"][0]),
+                               2 * np.ones(2))
+
+
+def test_bn_state_aggregation_flag():
+    state = {"bn1": {"mean": jnp.stack([jnp.zeros(2), 2 * jnp.ones(2)])}}
+    kept = aggregate_bn_state(state, aggregate=False)
+    np.testing.assert_allclose(np.asarray(kept["bn1"]["mean"][0]),
+                               np.zeros(2))
+    agg = aggregate_bn_state(state, aggregate=True)
+    np.testing.assert_allclose(np.asarray(agg["bn1"]["mean"][0]),
+                               np.ones(2))
+
+
+def test_is_bn_path():
+    paths = jax.tree_util.tree_flatten_with_path(_stacked_params())[0]
+    names = {"/".join(str(getattr(k, "key", k)) for k in p): is_bn_path(p)
+             for p, _ in paths}
+    assert names["conv1/w"] is False
+    assert names["bn1/scale"] is True
+
+
+def test_weight_divergence_zero_for_identical():
+    w = {"a": jnp.ones((3, 3))}
+    assert float(weight_divergence(w, w)) == 0.0
+    w2 = {"a": 2 * jnp.ones((3, 3))}
+    assert float(weight_divergence(w2, w)) == pytest.approx(1.0)
+
+
+# --------------------------------------------------------------------------
+# round engines (integration, tiny scale)
+
+@pytest.fixture(scope="module")
+def tiny_setup():
+    V = 4
+    key = jax.random.PRNGKey(0)
+    cfg = R.ResNetConfig(depth=8, num_classes=V, width=8)
+    tx, ty, ex, ey = make_synthetic_cifar(
+        key, num_classes=V, train_per_class=32, test_per_class=16, hw=16)
+    data = partition_positive_labels(tx, ty, V)
+    split = E.make_resnet_split(cfg)
+    opt = sgd_momentum(0.05, momentum=0.9, weight_decay=5e-4)
+    return V, cfg, data, (ex, ey), split, opt
+
+
+def test_sfpl_learns_under_positive_labels(tiny_setup):
+    V, cfg, data, (ex, ey), split, opt = tiny_setup
+    st = E.init_dcml_state(jax.random.PRNGKey(0),
+                           lambda k: R.init(k, cfg), V, opt, opt)
+    step = jax.jit(lambda k, s: E.sfpl_epoch(
+        k, s, data, split, opt, opt, num_clients=V, batch_size=8,
+        bn_mode="cmsd"))
+    key = jax.random.PRNGKey(1)
+    for _ in range(5):
+        key, ke = jax.random.split(key)
+        st, losses = step(ke, st)
+    rep = evaluate_split_noniid(st, split, ex, ey, V, rmsd=False, batch=16)
+    assert rep["accuracy"] > 60.0, rep   # chance = 25%
+
+
+def test_sflv2_fails_under_positive_labels(tiny_setup):
+    V, cfg, data, (ex, ey), split, opt = tiny_setup
+    st = E.init_dcml_state(jax.random.PRNGKey(0),
+                           lambda k: R.init(k, cfg), V, opt, opt)
+    step = jax.jit(lambda k, s: E.sflv2_epoch(
+        k, s, data, split, opt, opt, num_clients=V, batch_size=8))
+    key = jax.random.PRNGKey(1)
+    for _ in range(5):
+        key, ke = jax.random.split(key)
+        st, losses = step(ke, st)
+    rep = evaluate_split_iid(st, split, ex, ey, V, rmsd=True, batch=16)
+    # collapses toward chance (paper Table I: 10% at 10 classes)
+    assert rep["accuracy"] < 45.0, rep
+
+
+def test_sfpl_loss_decreases(tiny_setup):
+    V, cfg, data, _, split, opt = tiny_setup
+    st = E.init_dcml_state(jax.random.PRNGKey(2),
+                           lambda k: R.init(k, cfg), V, opt, opt)
+    step = jax.jit(lambda k, s: E.sfpl_epoch(
+        k, s, data, split, opt, opt, num_clients=V, batch_size=8))
+    key = jax.random.PRNGKey(3)
+    st, first = step(key, st)
+    for _ in range(3):
+        key, ke = jax.random.split(key)
+        st, last = step(ke, st)
+    assert float(last.mean()) < float(first.mean())
+
+
+# --------------------------------------------------------------------------
+# SFPL-for-LM identity property
+
+def test_sfpl_lm_identity_perm_equals_plain_loss():
+    from repro.models.common import TransformerConfig
+    from repro.models import transformer as T
+    from repro.core.split_lm import sfpl_lm_loss
+    key = jax.random.PRNGKey(0)
+    cfg = TransformerConfig(num_layers=2, d_model=64, num_heads=4,
+                            num_kv_heads=2, head_dim=16, d_ff=128,
+                            vocab_size=97, remat=False,
+                            compute_dtype="float32")
+    p = T.init(key, cfg)
+    batch = {"tokens": jax.random.randint(key, (4, 8), 0, 97),
+             "labels": jax.random.randint(key, (4, 8), 0, 97)}
+    plain, _ = T.loss_fn(p, batch, cfg)
+    l_id, _ = sfpl_lm_loss(T, p, batch, cfg, perm=jnp.arange(4))
+    assert float(plain) == pytest.approx(float(l_id), abs=1e-5)
+    # any permutation leaves the (batch-permutation-invariant) loss equal
+    l_p, _ = sfpl_lm_loss(T, p, batch, cfg, perm=jnp.array([2, 0, 3, 1]))
+    assert float(plain) == pytest.approx(float(l_p), rel=1e-4)
+
+
+# --------------------------------------------------------------------------
+# collector alpha (accumulation threshold, Algorithm 1)
+
+def test_collector_alpha_partial_flush_groups():
+    from repro.core.collector import GlobalCollector
+    key = jax.random.PRNGKey(0)
+    # 4 clients x 3 samples; alpha=0.5 -> two flushes of 2 clients each
+    coll = GlobalCollector(4, alpha=0.5)
+    perm = coll.make_pool_perm(key, 12)
+    p = np.asarray(perm)
+    assert sorted(p.tolist()) == list(range(12))
+    # no row crosses the flush boundary (rows 0-5 vs 6-11)
+    assert set(p[:6]) == set(range(6))
+    assert set(p[6:]) == set(range(6, 12))
+
+
+def test_collector_alpha_one_is_global():
+    from repro.core.collector import GlobalCollector
+    key = jax.random.PRNGKey(1)
+    coll = GlobalCollector(4, alpha=1.0)
+    perm = np.asarray(coll.make_pool_perm(key, 12))
+    assert sorted(perm.tolist()) == list(range(12))
+
+
+def test_sfpl_epoch_with_partial_alpha_still_learns(tiny_setup):
+    V, cfg, data, (ex, ey), split, opt = tiny_setup
+    from repro.models import resnet as R
+    st = E.init_dcml_state(jax.random.PRNGKey(5),
+                           lambda k: R.init(k, cfg), V, opt, opt)
+    step = jax.jit(lambda k, s: E.sfpl_epoch(
+        k, s, data, split, opt, opt, num_clients=V, batch_size=8,
+        bn_mode="cmsd", alpha=0.5))
+    key = jax.random.PRNGKey(6)
+    for _ in range(5):
+        key, ke = jax.random.split(key)
+        st, _ = step(ke, st)
+    rep = evaluate_split_noniid(st, split, ex, ey, V, rmsd=False, batch=16)
+    # alpha=0.5 pools 2-of-4 clients per flush: still far above chance,
+    # (generally below alpha=1 -- the paper's motivation for larger alpha)
+    assert rep["accuracy"] > 50.0, rep

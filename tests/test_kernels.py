@@ -1,0 +1,155 @@
+"""Per-kernel allclose vs the pure-jnp oracles, with hypothesis sweeps over
+shapes/dtypes (interpret mode executes the Pallas kernel body on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.rmsnorm.ops import rmsnorm
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+from repro.kernels.collector_permute.ops import collector_permute
+from repro.kernels.collector_permute.ref import permute_ref
+
+
+# --------------------------------------------------------------------------
+# flash attention
+
+@settings(max_examples=12, deadline=None)
+@given(
+    b=st.integers(1, 2),
+    s=st.sampled_from([16, 64, 100, 128]),
+    hk=st.sampled_from([(4, 2), (4, 4), (8, 1)]),
+    d=st.sampled_from([32, 64]),
+    causal=st.booleans(),
+    window=st.sampled_from([None, 16]),
+)
+def test_flash_attention_matches_ref(b, s, hk, d, causal, window):
+    h, k_heads = hk
+    key = jax.random.PRNGKey(b * 1000 + s)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, s, h, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, k_heads, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, k_heads, d), jnp.float32)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          interpret=True)
+    ref = attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_dtypes(dtype):
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (2, 64, 4, 32)).astype(dtype)
+    k = jax.random.normal(ks[1], (2, 64, 2, 32)).astype(dtype)
+    v = jax.random.normal(ks[2], (2, 64, 2, 32)).astype(dtype)
+    out = flash_attention(q, k, v, causal=True, interpret=True)
+    ref = attention_ref(q, k, v, causal=True)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-3
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+    assert out.dtype == dtype
+
+
+# --------------------------------------------------------------------------
+# rmsnorm
+
+@settings(max_examples=15, deadline=None)
+@given(
+    rows=st.integers(1, 33),
+    d=st.sampled_from([8, 100, 128, 256, 300]),
+    offset=st.sampled_from([0.0, 1.0]),
+)
+def test_rmsnorm_matches_ref(rows, d, offset):
+    key = jax.random.PRNGKey(rows * 7 + d)
+    x = jax.random.normal(key, (rows, d), jnp.float32)
+    scale = jax.random.normal(jax.random.fold_in(key, 1), (d,)) * 0.1 + 1.0
+    out = rmsnorm(x, scale, scale_offset=offset, interpret=True)
+    ref = rmsnorm_ref(x, scale, scale_offset=offset)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_rmsnorm_3d_bf16():
+    key = jax.random.PRNGKey(3)
+    x = jax.random.normal(key, (4, 7, 96)).astype(jnp.bfloat16)
+    s = jnp.ones((96,))
+    out = rmsnorm(x, s, interpret=True)
+    ref = rmsnorm_ref(x, s)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+# --------------------------------------------------------------------------
+# collector permute
+
+@settings(max_examples=15, deadline=None)
+@given(
+    rows=st.integers(2, 40),
+    feat=st.sampled_from([16, 100, 512, 513]),
+)
+def test_collector_permute_matches_ref(rows, feat):
+    key = jax.random.PRNGKey(rows + feat)
+    x = jax.random.normal(key, (rows, feat), jnp.float32)
+    perm = jax.random.permutation(jax.random.fold_in(key, 9), rows)
+    out = collector_permute(x, perm, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(permute_ref(x, perm)))
+
+
+def test_collector_permute_inverse_roundtrip():
+    key = jax.random.PRNGKey(11)
+    x = jax.random.normal(key, (24, 3, 17))
+    perm = jax.random.permutation(jax.random.fold_in(key, 1), 24)
+    shuf = collector_permute(x, perm, interpret=True)
+    back = collector_permute(shuf, jnp.argsort(perm), interpret=True)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(x))
+
+
+# --------------------------------------------------------------------------
+# sLSTM fused scan kernel
+
+from repro.kernels.slstm_scan.ops import slstm_scan
+from repro.kernels.slstm_scan.ref import slstm_scan_ref
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    b=st.integers(1, 5),
+    s=st.sampled_from([4, 20, 64, 70]),
+    hd=st.sampled_from([(2, 8), (4, 16), (1, 32)]),
+)
+def test_slstm_scan_matches_ref(b, s, hd):
+    h, dh = hd
+    key = jax.random.PRNGKey(b * 31 + s)
+    ks = jax.random.split(key, 5)
+    pres = [jax.random.normal(ks[i], (b, s, h, dh)) for i in range(4)]
+    R = jax.random.normal(ks[4], (4, h, dh, dh)) * 0.3
+    zero = jnp.zeros((b, h, dh))
+    state0 = (zero, zero + 1e-6, zero - 1e30, zero)
+    href, _ = slstm_scan_ref(*pres, R, state0)
+    hker = slstm_scan(*pres, R, interpret=True)
+    np.testing.assert_allclose(np.asarray(hker), np.asarray(href),
+                               rtol=3e-4, atol=3e-4)
+
+
+def test_xlstm_model_with_pallas_slstm_matches_xla():
+    from repro.models import xlstm as X
+    key = jax.random.PRNGKey(0)
+    base = dict(num_layers=2, d_model=32, num_heads=2, vocab_size=53,
+                slstm_every=2, chunk_len=4, remat=False,
+                compute_dtype="float32")
+    cfg_x = X.XLSTMConfig(**base, slstm_impl="xla")
+    cfg_p = X.XLSTMConfig(**base, slstm_impl="pallas_interpret")
+    p = X.init(key, cfg_x)
+    toks = jax.random.randint(key, (2, 8), 0, 53)
+    lx, _ = X.forward(p, {"tokens": toks}, cfg_x, training=False)
+    lp, _ = X.forward(p, {"tokens": toks}, cfg_p, training=False)
+    np.testing.assert_allclose(np.asarray(lp), np.asarray(lx),
+                               rtol=2e-3, atol=2e-3)

@@ -1,0 +1,194 @@
+"""Decode-vs-teacher-forced-forward consistency for every decode-capable
+family, and family-specific math oracles (mLSTM chunkwise == recurrent)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.common import TransformerConfig
+from repro.models import transformer as T
+from repro.models import xlstm as X
+from repro.models import rglru as RG
+from repro.models import whisper as W
+
+
+def _decode_all(model, params, state, toks, cfg):
+    outs = []
+    for t in range(toks.shape[1]):
+        lg, state = model.decode_step(params, state, toks[:, t:t + 1], cfg,
+                                      cur_pos=t)
+        outs.append(lg)
+    return jnp.concatenate(outs, axis=1)
+
+
+def test_transformer_decode_matches_forward():
+    cfg = TransformerConfig(num_layers=2, d_model=64, num_heads=4,
+                            num_kv_heads=2, head_dim=16, d_ff=128,
+                            vocab_size=97, remat=False,
+                            compute_dtype="float32",
+                            param_dtype="float32")
+    key = jax.random.PRNGKey(0)
+    p = T.init(key, cfg)
+    toks = jax.random.randint(key, (2, 6), 0, 97)
+    full, _ = T.forward(p, {"tokens": toks}, cfg, training=False)
+    st = T.init_decode_state(cfg, 2, 8, dtype=jnp.float32)
+    dec = _decode_all(T, p, st, toks, cfg)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_transformer_swa_ring_cache_matches_forward():
+    """Sliding-window ring cache must reproduce full-sequence SWA."""
+    cfg = TransformerConfig(num_layers=2, d_model=64, num_heads=4,
+                            num_kv_heads=2, head_dim=16, d_ff=128,
+                            vocab_size=97, sliding_window=3, remat=False,
+                            compute_dtype="float32", param_dtype="float32")
+    key = jax.random.PRNGKey(1)
+    p = T.init(key, cfg)
+    toks = jax.random.randint(key, (2, 8), 0, 97)
+    full, _ = T.forward(p, {"tokens": toks}, cfg, training=False)
+    st = T.init_decode_state(cfg, 2, 8, dtype=jnp.float32)  # ring slots=3
+    assert st["sub0"]["k"].shape[2] == 3
+    dec = _decode_all(T, p, st, toks, cfg)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_mlstm_chunkwise_matches_recurrent_oracle():
+    key = jax.random.PRNGKey(0)
+    B, H, S, D = 2, 2, 12, 4
+    ks = jax.random.split(key, 5)
+    q = jax.random.normal(ks[0], (B, H, S, D))
+    k = jax.random.normal(ks[1], (B, H, S, D))
+    v = jax.random.normal(ks[2], (B, H, S, D))
+    i_pre = jax.random.normal(ks[3], (B, H, S)) * 2
+    logf = jax.nn.log_sigmoid(jax.random.normal(ks[4], (B, H, S)) * 2)
+    h_chunk = X._mlstm_chunk_scan(q, k, v, i_pre, logf, chunk=4)
+    state = (jnp.zeros((B, H, D, D)), jnp.zeros((B, H, D)),
+             jnp.full((B, H), -1e30))
+    hs = []
+    for t in range(S):
+        state, h = X.mlstm_recurrent_step(
+            state, q[:, :, t], k[:, :, t], v[:, :, t],
+            i_pre[:, :, t], logf[:, :, t])
+        hs.append(h)
+    np.testing.assert_allclose(np.asarray(h_chunk),
+                               np.asarray(jnp.stack(hs, axis=2)),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_xlstm_decode_matches_forward():
+    cfg = X.XLSTMConfig(num_layers=4, d_model=32, num_heads=2,
+                        vocab_size=53, slstm_every=2, chunk_len=4,
+                        remat=False, compute_dtype="float32")
+    key = jax.random.PRNGKey(0)
+    p = X.init(key, cfg)
+    toks = jax.random.randint(key, (2, 8), 0, 53)
+    full, _ = X.forward(p, {"tokens": toks}, cfg, training=False)
+    st = X.init_decode_state(cfg, 2)
+    outs = []
+    for t in range(8):
+        lg, st = X.decode_step(p, st, toks[:, t:t + 1], cfg)
+        outs.append(lg)
+    dec = jnp.concatenate(outs, 1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full),
+                               rtol=5e-3, atol=5e-3)
+
+
+def test_rglru_decode_matches_forward():
+    cfg = RG.RGLRUConfig(num_layers=8, d_model=32, num_heads=2,
+                         num_kv_heads=1, head_dim=16, d_ff=64,
+                         vocab_size=53, window=4, remat=False,
+                         compute_dtype="float32")
+    key = jax.random.PRNGKey(0)
+    p = RG.init(key, cfg)
+    toks = jax.random.randint(key, (2, 6), 0, 53)
+    full, _ = RG.forward(p, {"tokens": toks}, cfg, training=False)
+    st = RG.init_decode_state(cfg, 2, 8, dtype=jnp.float32)
+    outs = []
+    for t in range(6):
+        lg, st = RG.decode_step(p, st, toks[:, t:t + 1], cfg, cur_pos=t)
+        outs.append(lg)
+    dec = jnp.concatenate(outs, 1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full),
+                               rtol=5e-3, atol=5e-3)
+
+
+def test_whisper_decode_matches_forward():
+    cfg = W.WhisperConfig(num_layers=2, d_model=32, num_heads=2,
+                          num_kv_heads=2, head_dim=16, d_ff=64,
+                          vocab_size=53, max_source_positions=10,
+                          max_target_positions=16, remat=False,
+                          compute_dtype="float32")
+    key = jax.random.PRNGKey(0)
+    p = W.init(key, cfg)
+    fe = jax.random.normal(key, (2, 10, 32))
+    toks = jax.random.randint(key, (2, 6), 0, 53)
+    full, _ = W.forward(p, {"frame_embeds": fe, "tokens": toks}, cfg,
+                        training=False)
+    enc = W.encode(p, fe, cfg, training=False)
+    st = W.init_decode_state(cfg, 2, 8, dtype=jnp.float32, enc_frames=10)
+    st = W.prefill_cross(p, enc, st, cfg)
+    outs = []
+    for t in range(6):
+        lg, st = W.decode_step(p, st, toks[:, t:t + 1], cfg, cur_pos=t)
+        outs.append(lg)
+    dec = jnp.concatenate(outs, 1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full),
+                               rtol=5e-3, atol=5e-3)
+
+
+def test_rglru_associative_scan_matches_step():
+    key = jax.random.PRNGKey(4)
+    W_ = 8
+    p = RG.rglru_init(key, W_, jnp.float32)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (2, 7, W_))
+    full = RG.rglru_apply(p, x)
+    h = jnp.zeros((2, W_))
+    outs = []
+    for t in range(7):
+        y, h = RG.rglru_step(p, x[:, t], h)
+        outs.append(y)
+    np.testing.assert_allclose(np.asarray(full),
+                               np.asarray(jnp.stack(outs, 1)),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_chunked_lm_loss_matches_plain():
+    from repro.models.common import chunked_lm_loss, softmax_cross_entropy
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (2, 12, 16))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (16, 31))
+    labels = jax.random.randint(key, (2, 12), 0, 31)
+    unembed = lambda xc: xc @ w
+    plain = softmax_cross_entropy(unembed(x), labels)
+    for chunks in (1, 2, 3, 4, 6):
+        chunked = chunked_lm_loss(x, labels, unembed, chunks=chunks)
+        np.testing.assert_allclose(float(chunked), float(plain), rtol=1e-6)
+
+
+def test_int8_kv_cache_decode_close_to_fp32():
+    """Quantized KV cache (int8 + per-slot scales): decode logits stay close
+    to the fp32-cache reference (serving memory optimization)."""
+    cfg = TransformerConfig(num_layers=2, d_model=64, num_heads=4,
+                            num_kv_heads=2, head_dim=16, d_ff=128,
+                            vocab_size=97, remat=False,
+                            compute_dtype="float32", param_dtype="float32")
+    key = jax.random.PRNGKey(7)
+    p = T.init(key, cfg)
+    toks = jax.random.randint(key, (2, 8), 0, 97)
+    ref_state = T.init_decode_state(cfg, 2, 8, dtype=jnp.float32)
+    q_state = T.init_decode_state(cfg, 2, 8, dtype=jnp.int8)
+    assert q_state["sub0"]["k"].dtype == jnp.int8
+    assert "k_scale" in q_state["sub0"]
+    for t in range(8):
+        lr, ref_state = T.decode_step(p, ref_state, toks[:, t:t+1], cfg,
+                                      cur_pos=t)
+        lq, q_state = T.decode_step(p, q_state, toks[:, t:t+1], cfg,
+                                    cur_pos=t)
+    # int8 introduces small quantization noise; argmax ranking preserved
+    ref_p = jax.nn.softmax(lr[:, -1])
+    q_p = jax.nn.softmax(lq[:, -1])
+    assert float(jnp.max(jnp.abs(ref_p - q_p))) < 0.05
+    np.testing.assert_array_equal(np.asarray(jnp.argmax(lr, -1)),
+                                  np.asarray(jnp.argmax(lq, -1)))

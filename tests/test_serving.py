@@ -1,0 +1,68 @@
+"""Continuous-batching scheduler: batched greedy decode must equal
+sequential single-request decode, across mixed prompt lengths and slot
+recycling."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.serving import ContinuousBatcher, Request
+
+
+def _single_greedy(spec, cfg, params, prompt, max_new, max_len=64):
+    model = spec.model
+    state = model.init_decode_state(cfg, 1, max_len, dtype=jnp.float32)
+    toks = list(prompt)
+    out = []
+    t = 0
+    cur = prompt[0]
+    while len(out) < max_new:
+        lg, state = model.decode_step(
+            params, state, jnp.asarray([[cur]], jnp.int32), cfg, cur_pos=t)
+        t += 1
+        if t < len(prompt):
+            cur = prompt[t]
+            continue
+        cur = int(jnp.argmax(lg[0, -1]))
+        out.append(cur)
+    return out
+
+
+def test_continuous_batching_matches_sequential():
+    spec = get_arch("qwen3-8b")
+    cfg = spec.make_smoke_config(compute_dtype="float32",
+                                 param_dtype="float32")
+    params = spec.model.init(jax.random.PRNGKey(0), cfg)
+    key = jax.random.PRNGKey(1)
+    prompts = [
+        jax.random.randint(jax.random.fold_in(key, i), (n,), 0,
+                           cfg.vocab_size).tolist()
+        for i, n in enumerate((3, 7, 5, 4, 6))]
+
+    batcher = ContinuousBatcher(spec, cfg, params, num_slots=2, max_len=64)
+    reqs = [Request(prompt=p, max_new_tokens=6) for p in prompts]
+    for r in reqs:
+        batcher.submit(r)
+    done, ticks = batcher.run()
+    assert len(done) == 5
+    # 5 requests through 2 slots forces recycling
+    assert ticks > 0
+
+    for r in reqs:
+        ref = _single_greedy(spec, cfg, params, r.prompt, 6)
+        assert r.output == ref, (r.prompt, r.output, ref)
+
+
+def test_scheduler_slot_reuse_isolated():
+    """A recycled slot must not leak KV entries from its previous tenant."""
+    spec = get_arch("qwen3-8b")
+    cfg = spec.make_smoke_config(compute_dtype="float32",
+                                 param_dtype="float32")
+    params = spec.model.init(jax.random.PRNGKey(0), cfg)
+    prompt = [5, 9, 2]
+    # run the same prompt as first and as third request on 1 slot
+    batcher = ContinuousBatcher(spec, cfg, params, num_slots=1, max_len=64)
+    for p in (prompt, [1, 2, 3, 4], prompt):
+        batcher.submit(Request(prompt=list(p), max_new_tokens=5))
+    done, _ = batcher.run()
+    assert done[0].output == done[2].output
