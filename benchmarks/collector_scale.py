@@ -1,0 +1,138 @@
+"""Collector-scaling benchmark: single-device vs mesh-sharded SFPL engine.
+
+Sweeps num_clients x local batch size (i.e. pooled-batch size N*B) and
+times one SFPL epoch with
+
+  * ``engine.sfpl_epoch``          — everything on one device;
+  * ``engine_dist.sfpl_epoch_sharded`` — clients + pooled batch sharded
+    over an 8-way ("data",) host mesh, collector shuffle as explicit
+    all_to_all (optionally through the Pallas permute kernel).
+
+Forced host devices stand in for a real accelerator mesh, so *wall-clock
+speedups here are not the point* — the benchmark pins down the sweep
+harness, verifies both engines agree at every size, and records the
+per-size loss deltas + timings that a TPU run would fill in.
+
+Run:  PYTHONPATH=src python benchmarks/collector_scale.py \
+          [--epochs 2] [--out BENCH_collector.json] [--use-kernel]
+Writes ``BENCH_collector.json`` (list of per-config records).
+"""
+from __future__ import annotations
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import engine as E
+from repro.core import engine_dist as ED
+from repro.data import make_synthetic_cifar, partition_positive_labels
+from repro.models import resnet as R
+from repro.optim import sgd_momentum
+
+SHARDS = 8
+
+
+def build(num_clients, batch_size, *, hw=8, width=8, seed=0):
+    cfg = R.ResNetConfig(depth=8, num_classes=num_clients, width=width)
+    key = jax.random.PRNGKey(seed)
+    tx, ty, _, _ = make_synthetic_cifar(
+        key, num_classes=num_clients, train_per_class=2 * batch_size,
+        test_per_class=2, hw=hw)
+    data = partition_positive_labels(tx, ty, num_clients)
+    split = E.make_resnet_split(cfg)
+    opt = sgd_momentum(0.05, momentum=0.9, weight_decay=5e-4)
+    st = E.init_dcml_state(key, lambda k: R.init(k, cfg), num_clients,
+                           opt, opt)
+    return cfg, data, split, opt, st
+
+
+def time_epochs(step, key, st, epochs):
+    # warmup/compile
+    st1, l = step(key, st)
+    jax.block_until_ready(l)
+    t0 = time.time()
+    losses = []
+    for e in range(epochs):
+        key, ke = jax.random.split(key)
+        st1, l = step(ke, st1)
+        losses.append(np.asarray(l))
+    jax.block_until_ready(st1["step"])
+    return (time.time() - t0) / epochs, np.concatenate(losses)
+
+
+def bench_config(num_clients, batch_size, *, epochs, use_kernel):
+    cfg, data, split, opt, st0 = build(num_clients, batch_size)
+    st0_host = jax.tree_util.tree_map(np.asarray, st0)
+    key = jax.random.PRNGKey(1)
+
+    single = jax.jit(lambda k, s: E.sfpl_epoch(
+        k, s, data, split, opt, opt, num_clients=num_clients,
+        batch_size=batch_size))
+    t_single, l_single = time_epochs(single, key, st0, epochs)
+
+    mesh = ED.make_data_mesh(SHARDS)
+    data_sh = ED.shard_client_data(data, mesh)
+    sharded = ED.make_sfpl_epoch_sharded(
+        split, opt, opt, data_sh, mesh=mesh, num_clients=num_clients,
+        batch_size=batch_size, use_kernel=use_kernel)
+    st_sh = ED.shard_dcml_state(
+        jax.tree_util.tree_map(jnp.asarray, st0_host), mesh)
+    t_sharded, l_sharded = time_epochs(sharded, key, st_sh, epochs)
+
+    rec = {
+        "num_clients": num_clients,
+        "batch_size": batch_size,
+        "pooled_batch": num_clients * batch_size,
+        "shards": SHARDS,
+        "use_kernel": use_kernel,
+        "epochs": epochs,
+        "sec_per_epoch_single": t_single,
+        "sec_per_epoch_sharded": t_sharded,
+        "speedup": t_single / t_sharded,
+        "max_loss_delta": float(np.abs(l_single - l_sharded).max()),
+    }
+    print(f"N={num_clients:3d} B={batch_size:3d} pooled={rec['pooled_batch']:4d}  "
+          f"single {t_single:.3f}s  sharded {t_sharded:.3f}s  "
+          f"dloss {rec['max_loss_delta']:.2e}", flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--epochs", type=int, default=2)
+    ap.add_argument("--out", default="BENCH_collector.json")
+    ap.add_argument("--use-kernel", action="store_true")
+    ap.add_argument("--clients", type=int, nargs="*", default=[8, 16])
+    ap.add_argument("--batches", type=int, nargs="*", default=[8, 16])
+    args = ap.parse_args()
+
+    records = []
+    for n in args.clients:
+        for b in args.batches:
+            if n % SHARDS or (n * b // SHARDS) % SHARDS:
+                print(f"skip N={n} B={b}: not divisible for {SHARDS}-way "
+                      f"balanced exchange", flush=True)
+                continue
+            records.append(bench_config(n, b, epochs=args.epochs,
+                                        use_kernel=args.use_kernel))
+    out = {
+        "bench": "collector_scale",
+        "devices": len(jax.devices()),
+        "backend": jax.default_backend(),
+        "records": records,
+    }
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=1, default=float)
+    print(f"wrote {args.out} ({len(records)} configs)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""Mesh-sharded SFPL: Algorithm 1 with the collector as an all_to_all.
+
+Eight host devices stand in for an accelerator mesh. Eight clients (one
+class each — only positive labels) and the pooled smashed-data batch are
+sharded over a ("data",) mesh; every server-side update shuffles the pool
+with one explicit all_to_all (balanced block permutation, drop-free by
+construction) and the activation-gradient de-shuffle is the same exchange
+with the inverse permutation, supplied by autodiff. The run finishes by
+checking the loss trajectory against the single-device engine.
+
+Run:  PYTHONPATH=src python examples/sfpl_sharded.py
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import engine as E
+from repro.core import engine_dist as ED
+from repro.data import make_synthetic_cifar, partition_positive_labels
+from repro.models import resnet as R
+from repro.optim import sgd_momentum
+
+
+def main():
+    V = 8                   # clients == classes == mesh shards
+    cfg = R.ResNetConfig(depth=8, num_classes=V, width=8)
+    key = jax.random.PRNGKey(0)
+    tx, ty, ex, ey = make_synthetic_cifar(
+        key, num_classes=V, train_per_class=32, test_per_class=16, hw=8)
+    data = partition_positive_labels(tx, ty, V)
+    split = E.make_resnet_split(cfg)
+    opt = sgd_momentum(0.05, momentum=0.9, weight_decay=5e-4)
+    st0 = E.init_dcml_state(key, lambda k: R.init(k, cfg), V, opt, opt)
+    st0_host = jax.tree_util.tree_map(np.asarray, st0)
+
+    mesh = ED.make_data_mesh(8)
+    print(f"mesh: {mesh.devices.shape} over axis {mesh.axis_names}")
+    data_sh = ED.shard_client_data(data, mesh)
+    epoch = ED.make_sfpl_epoch_sharded(
+        split, opt, opt, data_sh, mesh=mesh, num_clients=V, batch_size=8,
+        check_capacity=True)
+
+    st = ED.shard_dcml_state(st0, mesh)
+    key = jax.random.PRNGKey(1)
+    keys, sh_losses = [], []
+    for ep in range(4):
+        key, ke = jax.random.split(key)
+        keys.append(ke)
+        st, losses = epoch(ke, st)      # donated: buffers reused in place
+        sh_losses.append(np.asarray(losses))
+        print(f"epoch {ep} sharded loss {float(losses.mean()):.4f}")
+
+    from repro.core.evaluate import evaluate_split_noniid
+    rep = evaluate_split_noniid(st, split, ex, ey, V, rmsd=False, batch=16)
+    print(f"non-IID accuracy {rep['accuracy']:.1f}% (chance 12.5%)")
+
+    # single-device engine on the same seeds: trajectories must agree
+    ref_step = jax.jit(lambda k, s: E.sfpl_epoch(
+        k, s, data, split, opt, opt, num_clients=V, batch_size=8))
+    st_ref = jax.tree_util.tree_map(jnp.asarray, st0_host)
+    ref_losses = []
+    for ke in keys:
+        st_ref, losses = ref_step(ke, st_ref)
+        ref_losses.append(np.asarray(losses))
+    diff = np.abs(np.concatenate(ref_losses)
+                  - np.concatenate(sh_losses)).max()
+    print(f"max |single - sharded| loss delta: {diff:.2e} (tolerance 1e-4)")
+    assert diff < 1e-4
+
+
+if __name__ == "__main__":
+    main()

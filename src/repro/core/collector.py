@@ -29,8 +29,8 @@ def inverse_permutation(perm):
 
 def _permute_leaf(x, perm, use_kernel, interpret):
     if use_kernel:
-        from repro.kernels.collector_permute.ops import collector_permute
-        return collector_permute(x, perm, interpret=interpret)
+        from repro.kernels.collector_permute.ops import collector_permute_ad
+        return collector_permute_ad(x, perm, interpret)
     return jnp.take(x, perm, axis=0)
 
 

@@ -18,12 +18,20 @@ gradient routing of Algorithm 1 is `shuffle_shard_map(g, inverse_permutation
 forward shuffle produces exactly that (tested in tests/test_collector_dist).
 
 Capacity note: a random permutation may route more rows from one source
-shard to one destination shard than B_local; the exchange therefore uses a
-per-pair capacity buffer of ``cap = ceil(B_local * slack)`` with validity
-masks (drop-free for any permutation when ``slack`` covers the worst case;
-``slack=1.0`` + assertion covers the common uniform case). For production
-the collector uses balanced block permutations (``make_balanced_perm``)
-that are drop-free at cap == B_local / n_shards by construction.
+shard to one destination shard than the bucket holds; the exchange uses a
+per-pair capacity buffer of ``cap = int(B_local * slack) // n_shards + 1``
+with validity masks. Overflowing rows are SILENTLY DROPPED (zeros in the
+output) unless checked:
+
+  * ``max_pair_load(perm, n_shards)`` — host-side: the worst (src, dst)
+    bucket load of a permutation; compare against ``pair_capacity``.
+  * ``assert_pair_capacity(perm, ...)`` — host-side hard failure.
+  * ``shuffle_shard_map(..., check_capacity=True)`` — in-graph
+    ``jax.debug.callback`` that raises from inside the jitted program.
+
+For production the collector uses balanced block permutations
+(``make_balanced_perm``) that are drop-free at ``slack=1.0`` by
+construction (exactly B_local/n_shards rows per pair).
 """
 from __future__ import annotations
 
@@ -31,7 +39,10 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import PartitionSpec as P
+
+from repro.kernels._compat import get_shard_map
 
 
 def make_balanced_perm(key, n, num_shards):
@@ -66,24 +77,119 @@ def make_balanced_perm(key, n, num_shards):
     return p1[p2[p3]]
 
 
-@functools.partial(jax.jit, static_argnames=("mesh", "axis", "slack"))
-def shuffle_shard_map(x, perm, *, mesh, axis="data", slack=2.0):
+def mesh_axis_size(mesh, axis):
+    """Number of shards along ``axis`` of a mesh."""
+    return dict(zip(mesh.axis_names, mesh.devices.shape))[axis]
+
+
+def pair_capacity(n, n_shards, slack):
+    """Rows the exchange buffer holds per (src, dst) shard pair."""
+    b = n // n_shards
+    return int(b * slack) // n_shards + 1
+
+
+def pair_load(perm, n_shards):
+    """Host-side (src, dst) bucket-load matrix of a permutation.
+
+    ``load[s, d]`` = rows that shard ``s`` must ship to shard ``d`` under
+    ``out[i] = x[perm[i]]`` with both arrays row-sharded into ``n_shards``
+    equal slabs."""
+    perm = np.asarray(perm)
+    n = perm.shape[0]
+    assert n % n_shards == 0, (n, n_shards)
+    b = n // n_shards
+    dst = np.arange(n) // b          # destination shard of each output row
+    src = perm // b                  # source shard of the row it pulls
+    load = np.zeros((n_shards, n_shards), np.int64)
+    np.add.at(load, (src, dst), 1)
+    return load
+
+
+def max_pair_load(perm, n_shards):
+    """Worst bucket load — a perm is drop-free iff this <= pair_capacity."""
+    return int(pair_load(perm, n_shards).max())
+
+
+def assert_pair_capacity(perm, n_shards, *, slack):
+    """Host-side guard: raise before launching an exchange that would drop
+    rows."""
+    n = np.asarray(perm).shape[0]
+    cap = pair_capacity(n, n_shards, slack)
+    worst = max_pair_load(perm, n_shards)
+    if worst > cap:
+        raise ValueError(
+            f"collector exchange would drop rows: max (src, dst) load "
+            f"{worst} exceeds capacity {cap} (n={n}, shards={n_shards}, "
+            f"slack={slack}); raise slack or use make_balanced_perm")
+
+
+def _raise_on_overflow(count):
+    if int(count) > 0:
+        raise RuntimeError(
+            f"shuffle_shard_map dropped {int(count)} rows: per-pair bucket "
+            f"capacity exceeded — raise slack or use make_balanced_perm")
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("mesh", "axis", "slack", "use_kernel", "check_capacity"))
+def shuffle_shard_map(x, perm, *, mesh, axis="data", slack=2.0,
+                      use_kernel=False, check_capacity=False):
     """x: (N, ...) sharded over ``axis`` on dim 0; perm: (N,) replicated.
 
     Returns x[perm] with the same sharding, via an explicit all_to_all.
+
+    Differentiable by construction: the registered VJP is this very
+    function with the inverse permutation (Algorithm 1's de-shuffle), so
+    the backward pass is one more all_to_all with the same schedule. The
+    VJP is registered at this level — not inside the shard_map body —
+    because per-shard (data-dependent) custom_vjp residuals do not survive
+    shard_map transposition with replication checking off.
+
+    ``use_kernel`` routes the local bucket permute through the Pallas
+    ``collector_permute`` gather kernel (interpret-mode off-TPU);
+    ``check_capacity`` adds an in-graph ``jax.debug.callback`` that raises
+    if any (src, dst) bucket overflows instead of silently zero-filling.
     """
+    impl = functools.partial(_shuffle_impl, mesh=mesh, axis=axis,
+                             slack=slack, use_kernel=use_kernel,
+                             check_capacity=check_capacity)
+
+    @jax.custom_vjp
+    def shuf(x, perm):
+        return impl(x, perm)
+
+    def shuf_fwd(x, perm):
+        return impl(x, perm), perm
+
+    def shuf_bwd(perm, g):
+        # exact for drop-free perms; under bucket overflow the forward
+        # already lost rows (see check_capacity), so exactness is moot
+        return impl(g, jnp.argsort(perm)), None
+
+    shuf.defvjp(shuf_fwd, shuf_bwd)
+    return shuf(x, perm)
+
+
+def _shuffle_impl(x, perm, *, mesh, axis, slack, use_kernel,
+                  check_capacity):
     n = x.shape[0]
-    n_shards = dict(zip(mesh.axis_names, mesh.devices.shape))[axis]
+    n_shards = mesh_axis_size(mesh, axis)
     b = n // n_shards
-    cap = int(b * slack) // n_shards + 1
+    cap = pair_capacity(n, n_shards, slack)
+    interpret = jax.default_backend() != "tpu"
+
+    def local_permute(rows, idx):
+        if use_kernel:
+            from repro.kernels.collector_permute.ops import (
+                collector_permute_ad)
+            return collector_permute_ad(rows, idx, interpret)
+        return rows[idx]
 
     def local(x_loc, perm):
         # this shard's rows of the OUTPUT: out[i] = x[perm[i]]
         sid = jax.lax.axis_index(axis)
-        # which global rows do I need, and who owns them
-        my_out = jnp.arange(b) + sid * b
-        src_rows = perm[my_out]                       # (b,)
-        # conversely: which of MY rows does each shard need?
+        # which of MY rows does each shard need?
         # shard s needs my row r if perm[s*b + j] == sid*b + r for some j.
         # build send buckets: for each destination shard, up to cap rows.
         inv = jnp.argsort(perm)                       # inv[g] = output pos
@@ -95,11 +201,13 @@ def shuffle_shard_map(x, perm, *, mesh, axis="data", slack=2.0):
         dsorted = dest[order]
         first = jnp.searchsorted(dsorted, dsorted, side="left")
         rank = jnp.arange(b) - first
+        if check_capacity:
+            jax.debug.callback(_raise_on_overflow, jnp.sum(rank >= cap))
         send = jnp.zeros((n_shards, cap) + x_loc.shape[1:], x_loc.dtype)
         send_pos = jnp.zeros((n_shards, cap), jnp.int32)
         slot_d = dsorted
         slot_r = jnp.minimum(rank, cap - 1)
-        rows_sorted = x_loc[order % b]
+        rows_sorted = local_permute(x_loc, order % b)
         send = send.at[slot_d, slot_r].set(rows_sorted)
         send_pos = send_pos.at[slot_d, slot_r].set(out_pos[order])
         valid = jnp.zeros((n_shards, cap), bool).at[slot_d, slot_r].set(
@@ -117,8 +225,16 @@ def shuffle_shard_map(x, perm, *, mesh, axis="data", slack=2.0):
         out = out.at[fpos].set(flat, mode="drop")
         return out
 
-    shuf = jax.shard_map(
-        local, mesh=mesh,
-        in_specs=(P(axis), P()),
-        out_specs=P(axis))
+    shard_map = get_shard_map()
+    kwargs = dict(mesh=mesh, in_specs=(P(axis), P()), out_specs=P(axis))
+    if use_kernel:
+        # pallas_call has no replication rule; the kernel only touches
+        # per-shard rows so skipping the check is sound. The flag was
+        # renamed check_rep -> check_vma across jax versions.
+        try:
+            shuf = shard_map(local, **kwargs, check_rep=False)
+        except TypeError:
+            shuf = shard_map(local, **kwargs, check_vma=False)
+    else:
+        shuf = shard_map(local, **kwargs)
     return shuf(x, perm)

@@ -83,6 +83,22 @@ def init_dcml_state(key, init_fn, num_clients, opt_client, opt_server):
 # --------------------------------------------------------------------------
 # SFPL epoch (Algorithm 1 + 2)
 
+def make_client_update(split: SplitModel, opt_c):
+    """Per-client local backprop + optimizer step given routed-back dA.
+
+    Shared by the single-device and the mesh-sharded SFPL engines so the two
+    stay numerically interchangeable by construction.
+    """
+    def client_upd(cp, cbn, copt, x, da, step):
+        def f(cp_):
+            a, ncs = split.client_fwd(cp_, cbn, x, True, None)
+            return a, ncs
+        _, vjp, ncs = jax.vjp(f, cp, has_aux=True)
+        g_cp = vjp(da)[0]
+        cp_new, copt_new = opt_c.update(g_cp, copt, cp, step)
+        return cp_new, copt_new, ncs
+    return client_upd
+
 def sfpl_epoch(key, st, data, split: SplitModel, opt_c, opt_s, *,
                num_clients, batch_size, bn_mode="cmsd", alpha=1.0):
     """data: {"x": (N, n, ...), "y": (N, n)}. One epoch = scan over the
@@ -129,16 +145,10 @@ def sfpl_epoch(key, st, data, split: SplitModel, opt_c, opt_s, *,
         # 4. de-shuffle dA and run client backprop locally
         dA = coll.deshuffle_grads(g_a, perm)
 
-        def client_upd(cp, cbn, copt, x, da):
-            def f(cp_):
-                a, ncs = split.client_fwd(cp_, cbn, x, True, None)
-                return a, ncs
-            _, vjp, ncs = jax.vjp(f, cp, has_aux=True)
-            g_cp = vjp(da)[0]
-            cp_new, copt_new = opt_c.update(g_cp, copt, cp, st["step"])
-            return cp_new, copt_new, ncs
-
-        cp_new, copt_new, ncbn2 = jax.vmap(client_upd)(
+        client_upd = make_client_update(split, opt_c)
+        cp_new, copt_new, ncbn2 = jax.vmap(
+            lambda cp, cbn, copt, x, da: client_upd(cp, cbn, copt, x, da,
+                                                    st["step"]))(
             st["cp"], ncbn, st["copt"], xb, dA)
 
         st = dict(st, cp=cp_new, cbn=ncbn2, sp=sp_new, sbn=nsbn,

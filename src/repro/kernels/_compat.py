@@ -1,0 +1,31 @@
+"""Version compatibility for the Pallas-TPU API surface.
+
+jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams`` (and
+moved ``jax.experimental.shard_map.shard_map`` to ``jax.shard_map``) across
+0.4.x -> 0.5/0.6. The repo targets whichever is installed; all kernels and
+collective modules route through these helpers instead of touching the
+moving names directly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.experimental.pallas.tpu as pltpu
+
+_TPU_COMPILER_PARAMS = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams")
+
+
+def tpu_compiler_params(**kwargs):
+    """``pltpu.CompilerParams(**kwargs)`` on new jax, ``TPUCompilerParams``
+    on <= 0.4.x."""
+    return _TPU_COMPILER_PARAMS(**kwargs)
+
+
+def get_shard_map():
+    """``jax.shard_map`` when present (jax >= 0.6), else the experimental
+    spelling that 0.4.x ships."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        return sm
+    from jax.experimental.shard_map import shard_map
+    return shard_map

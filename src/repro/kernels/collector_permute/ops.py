@@ -24,3 +24,24 @@ def collector_permute(x, perm, *, interpret=False):
     block_d = dp if dp <= 512 else 512 if dp % 512 == 0 else 128
     y = collector_permute_2d(x2, perm, block_d=block_d, interpret=interpret)
     return y[:, :d].reshape(orig_shape)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def collector_permute_ad(x, perm, interpret=False):
+    """Differentiable ``collector_permute``: the VJP of a row gather is the
+    gather by the inverse permutation — i.e. Algorithm 1's gradient
+    de-shuffle, so backprop through the kernelized collector routes
+    activation gradients back to their source rows with the same one-pass
+    Pallas kernel."""
+    return collector_permute(x, perm, interpret=interpret)
+
+
+def _permute_fwd(x, perm, interpret):
+    return collector_permute(x, perm, interpret=interpret), perm
+
+
+def _permute_bwd(interpret, perm, g):
+    return collector_permute(g, jnp.argsort(perm), interpret=interpret), None
+
+
+collector_permute_ad.defvjp(_permute_fwd, _permute_bwd)

@@ -5,13 +5,20 @@ Two modes:
     synthetic Markov token stream — runnable on CPU, demonstrates the full
     step (optimizer, schedule, checkpointing) and the SFPL collector option
     (``--sfpl`` inserts the cut-layer shuffle into the jitted step).
-  * Paper mode (``--paper``): the SFPL/SFLv2/FL round engines on the
-    synthetic CIFAR-like set with ResNet-8/32/56 (see examples/ and
-    benchmarks/ for the full study).
+  * Paper mode (``--paper``): the SFPL round engine on the synthetic
+    CIFAR-like set with a split ResNet. ``--sharded`` swaps in the
+    mesh-sharded engine (``engine_dist.sfpl_epoch_sharded``): clients and
+    the pooled smashed-data batch are sharded over a ("data",) mesh across
+    all visible devices, the collector shuffle runs as an explicit
+    all_to_all, and ``--use-kernel`` routes the local permute through the
+    Pallas collector kernel. To simulate a mesh on CPU, set
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 before launching.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.train --arch qwen3-8b --smoke \
       --steps 50 [--sfpl] [--ckpt out.npz]
+  PYTHONPATH=src python -m repro.launch.train --paper --sharded \
+      --clients 8 --epochs 4 [--use-kernel]
 """
 from __future__ import annotations
 
@@ -70,6 +77,65 @@ def train_lm(arch_id, *, steps=50, batch=8, seq=64, smoke=True, sfpl=False,
     return losses
 
 
+def train_paper(*, num_clients=8, epochs=4, batch_size=8, sharded=False,
+                use_kernel=False, depth=8, width=8, hw=8, lr=0.05,
+                log_every=1):
+    """SFPL rounds (Algorithm 1 + 2) on synthetic CIFAR, one client per
+    class (only positive labels). ``sharded`` runs the mesh engine over all
+    visible devices."""
+    from repro.core import engine as E
+    from repro.core.evaluate import evaluate_split_noniid
+    from repro.data import make_synthetic_cifar, partition_positive_labels
+    from repro.models import resnet as R
+    from repro.optim import sgd_momentum
+
+    cfg = R.ResNetConfig(depth=depth, num_classes=num_clients, width=width)
+    key = jax.random.PRNGKey(0)
+    tx, ty, ex, ey = make_synthetic_cifar(
+        key, num_classes=num_clients, train_per_class=4 * batch_size,
+        test_per_class=2 * batch_size, hw=hw)
+    data = partition_positive_labels(tx, ty, num_clients)
+    split = E.make_resnet_split(cfg)
+    opt = sgd_momentum(lr, momentum=0.9, weight_decay=5e-4)
+    st = E.init_dcml_state(key, lambda k: R.init(k, cfg), num_clients,
+                           opt, opt)
+
+    if sharded:
+        from repro.core import engine_dist as ED
+        n_dev = len(jax.devices())
+        shards = max(s for s in range(1, n_dev + 1)
+                     if num_clients % s == 0
+                     and (num_clients * batch_size // s) % s == 0)
+        mesh = ED.make_data_mesh(shards)
+        print(f"sharded SFPL: {shards}-way data mesh over {n_dev} "
+              f"device(s), use_kernel={use_kernel}")
+        data_dev = ED.shard_client_data(data, mesh)
+        st = ED.shard_dcml_state(st, mesh)
+        epoch = ED.make_sfpl_epoch_sharded(
+            split, opt, opt, data_dev, mesh=mesh, num_clients=num_clients,
+            batch_size=batch_size, use_kernel=use_kernel)
+    else:
+        epoch = jax.jit(lambda k, s: E.sfpl_epoch(
+            k, s, data, split, opt, opt, num_clients=num_clients,
+            batch_size=batch_size))
+
+    key = jax.random.PRNGKey(1)
+    t0 = time.time()
+    mean_losses = []
+    for ep in range(epochs):
+        key, ke = jax.random.split(key)
+        st, losses = epoch(ke, st)
+        mean_losses.append(float(losses.mean()))
+        if ep % log_every == 0 or ep == epochs - 1:
+            print(f"epoch {ep:3d} loss {mean_losses[-1]:.4f} "
+                  f"({time.time()-t0:.1f}s)", flush=True)
+    rep = evaluate_split_noniid(st, split, ex, ey, num_clients, rmsd=False,
+                                batch=2 * batch_size)
+    print(f"non-IID accuracy {rep['accuracy']:.1f}% "
+          f"(chance {100.0 / num_clients:.1f}%)")
+    return mean_losses
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-8b")
@@ -79,13 +145,30 @@ def main():
     ap.add_argument("--smoke", action="store_true", default=True)
     ap.add_argument("--full", dest="smoke", action="store_false")
     ap.add_argument("--sfpl", action="store_true")
-    ap.add_argument("--lr", type=float, default=3e-3)
-    ap.add_argument("--optimizer", default="adamw")
+    ap.add_argument("--lr", type=float, default=None,
+                    help="default 3e-3 (LM mode) / 0.05 (--paper)")
+    ap.add_argument("--optimizer", default="adamw",
+                    help="LM mode only; --paper is SGD-momentum (paper)")
     ap.add_argument("--ckpt")
+    ap.add_argument("--paper", action="store_true",
+                    help="SFPL round engine on synthetic CIFAR")
+    ap.add_argument("--sharded", action="store_true",
+                    help="mesh-sharded engine (with --paper)")
+    ap.add_argument("--use-kernel", action="store_true",
+                    help="Pallas collector permute on the sharded path")
+    ap.add_argument("--clients", type=int, default=8)
+    ap.add_argument("--epochs", type=int, default=4)
     args = ap.parse_args()
-    losses = train_lm(args.arch, steps=args.steps, batch=args.batch,
-                      seq=args.seq, smoke=args.smoke, sfpl=args.sfpl,
-                      lr=args.lr, optimizer=args.optimizer, ckpt=args.ckpt)
+    if args.paper:
+        losses = train_paper(num_clients=args.clients, epochs=args.epochs,
+                             batch_size=args.batch, sharded=args.sharded,
+                             use_kernel=args.use_kernel,
+                             lr=args.lr if args.lr is not None else 0.05)
+    else:
+        losses = train_lm(args.arch, steps=args.steps, batch=args.batch,
+                          seq=args.seq, smoke=args.smoke, sfpl=args.sfpl,
+                          lr=args.lr if args.lr is not None else 3e-3,
+                          optimizer=args.optimizer, ckpt=args.ckpt)
     print(f"first loss {losses[0]:.4f} -> last loss {losses[-1]:.4f}")
 
 

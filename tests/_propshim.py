@@ -1,0 +1,85 @@
+"""Property-test shim: real hypothesis when installed, otherwise a tiny
+fallback that expands each strategy into a fixed handful of seeded examples
+via ``pytest.mark.parametrize``.
+
+The fallback keeps the test *bodies* untouched: ``@settings(...)`` becomes a
+no-op and ``@given(a=st.integers(0, 8), b=st.sampled_from([...]))`` turns
+into one parametrize mark whose cases are drawn deterministically (seeded by
+the test name), always including the strategy bounds so edge cases stay
+covered. This trades hypothesis' shrinking/search for a dependency-free,
+reproducible sweep — good enough for CI where hypothesis may be absent.
+"""
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised implicitly when hypothesis is installed
+    from hypothesis import given, settings, strategies  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import random
+    import zlib
+
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+    _FALLBACK_EXAMPLES = 5
+
+    class _Strategy:
+        """A strategy is just `examples(rng, k)` -> list of k values."""
+
+        def __init__(self, draw, edge_cases=()):
+            self._draw = draw
+            self._edge_cases = list(edge_cases)
+
+        def examples(self, rng, k):
+            out = list(self._edge_cases[:k])
+            while len(out) < k:
+                out.append(self._draw(rng))
+            return out
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value),
+                             edge_cases=(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(options):
+            options = list(options)
+            return _Strategy(lambda rng: rng.choice(options),
+                             edge_cases=options)
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.getrandbits(1)),
+                             edge_cases=(False, True))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value),
+                             edge_cases=(min_value, max_value))
+
+    strategies = _Strategies()
+
+    def settings(*args, **kwargs):  # noqa: D401 - mirrors hypothesis API
+        """No-op in fallback mode (example count is fixed by the shim)."""
+        def deco(fn):
+            return fn
+        return deco
+
+    def given(**strats):
+        names = sorted(strats)
+
+        def deco(fn):
+            # deterministic per-test seed so runs are reproducible
+            rng = random.Random(zlib.crc32(fn.__name__.encode()))
+            columns = {n: strats[n].examples(rng, _FALLBACK_EXAMPLES)
+                       for n in names}
+            # zip columns: example i takes the i-th draw of every strategy,
+            # with each column independently shuffled so edge cases from
+            # different strategies don't always co-occur.
+            for n in names:
+                rng.shuffle(columns[n])
+            cases = [pytest.param(*(columns[n][i] for n in names))
+                     for i in range(_FALLBACK_EXAMPLES)]
+            return pytest.mark.parametrize(",".join(names), cases)(fn)
+        return deco

@@ -5,6 +5,7 @@ import os
 import subprocess
 import sys
 
+import numpy as np
 import pytest
 
 WORKER = r"""
@@ -12,7 +13,9 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
-from repro.core.collector_dist import shuffle_shard_map, make_balanced_perm
+from repro.core.collector_dist import (
+    shuffle_shard_map, make_balanced_perm, assert_pair_capacity,
+    max_pair_load, pair_capacity)
 from repro.core.collector import inverse_permutation
 
 mesh = jax.make_mesh((8,), ("data",))
@@ -28,10 +31,11 @@ np.testing.assert_allclose(np.asarray(out), np.asarray(x)[np.asarray(perm)],
                            rtol=1e-6)
 print("uniform-perm OK")
 
-# balanced permutation is drop-free at slack=1
+# balanced permutation is drop-free at slack=1 (and passes the in-graph check)
 bperm = make_balanced_perm(jax.random.fold_in(key, 2), N, 8)
 assert sorted(np.asarray(bperm).tolist()) == list(range(N))
-out2 = shuffle_shard_map(xs, bperm, mesh=mesh, slack=1.0)
+out2 = shuffle_shard_map(xs, bperm, mesh=mesh, slack=1.0,
+                         check_capacity=True)
 np.testing.assert_allclose(np.asarray(out2),
                            np.asarray(x)[np.asarray(bperm)], rtol=1e-6)
 print("balanced-perm OK")
@@ -42,6 +46,25 @@ back = shuffle_shard_map(out2, inverse_permutation(bperm), mesh=mesh,
 np.testing.assert_allclose(np.asarray(back), np.asarray(x), rtol=1e-6)
 print("deshuffle OK")
 
+# autodiff through the sharded gather IS the gradient de-shuffle
+w = jnp.arange(float(N))[:, None]
+g = jax.grad(lambda v: jnp.sum(
+    shuffle_shard_map(v, bperm, mesh=mesh, slack=1.0) * w))(xs)
+inv = np.argsort(np.asarray(bperm))
+np.testing.assert_allclose(np.asarray(g),
+                           np.tile(inv[:, None], (1, D)), rtol=1e-6)
+print("autodiff-deshuffle OK")
+
+# Pallas collector_permute kernel on the local bucket permute
+out_k = shuffle_shard_map(xs, bperm, mesh=mesh, slack=1.0, use_kernel=True)
+np.testing.assert_allclose(np.asarray(out_k),
+                           np.asarray(x)[np.asarray(bperm)], rtol=1e-6)
+g_k = jax.grad(lambda v: jnp.sum(
+    shuffle_shard_map(v, bperm, mesh=mesh, slack=1.0, use_kernel=True)
+    * w))(xs)
+np.testing.assert_allclose(np.asarray(g_k), np.asarray(g), rtol=1e-6)
+print("kernel-path OK")
+
 # balanced perm mixes shards: every output shard must hold rows from
 # every source shard (the IID-simulation property)
 src_shard = np.asarray(bperm) // 8
@@ -49,6 +72,36 @@ for s in range(8):
     got = set(src_shard[s * 8:(s + 1) * 8].tolist())
     assert len(got) == 8, (s, got)
 print("mixing OK")
+
+# --- capacity regression: adversarial perm at slack=1.0 ----------------
+# every output shard pulls ALL its rows from one source shard -> per-pair
+# load b=8 against capacity 2.
+adv = jnp.roll(jnp.arange(N), -8)
+assert max_pair_load(adv, 8) == 8
+assert pair_capacity(N, 8, 1.0) == 2
+try:
+    assert_pair_capacity(adv, 8, slack=1.0)
+    raise SystemExit("host guard did not raise")
+except ValueError:
+    print("capacity-host-guard OK")
+
+# without the check, rows are silently dropped (zero-filled output)
+bad = np.asarray(shuffle_shard_map(xs, adv, mesh=mesh, slack=1.0))
+assert not np.allclose(bad, np.asarray(x)[np.asarray(adv)])
+# overflow rows overwrite the last slot and invalidate it, so only the
+# rank-0 row of each bucket survives: 7 of 8 output rows per shard are 0
+assert (np.abs(bad).sum(axis=1) == 0).sum() == 8 * 7
+print("capacity-silent-drop OK")
+
+# with check_capacity=True the jitted program itself raises
+try:
+    r = shuffle_shard_map(xs, adv, mesh=mesh, slack=1.0,
+                          check_capacity=True)
+    r.block_until_ready()
+    raise SystemExit("in-graph check did not raise")
+except Exception as e:
+    assert "capacity exceeded" in str(e) or "CpuCallback" in str(e), e
+    print("capacity-ingraph OK")
 """
 
 
@@ -63,5 +116,26 @@ def test_shard_map_collector(_, tmp_path):
                          capture_output=True, text=True, timeout=420)
     assert res.returncode == 0, res.stdout + res.stderr
     for token in ("uniform-perm OK", "balanced-perm OK", "deshuffle OK",
-                  "mixing OK"):
+                  "autodiff-deshuffle OK", "kernel-path OK", "mixing OK",
+                  "capacity-host-guard OK", "capacity-silent-drop OK",
+                  "capacity-ingraph OK"):
         assert token in res.stdout, res.stdout
+
+
+def test_pair_load_host_helpers():
+    """pair_load math needs no devices: identity perm is diagonal, the
+    rolled perm concentrates a full slab on one pair."""
+    from repro.core.collector_dist import (
+        pair_load, max_pair_load, pair_capacity, assert_pair_capacity)
+    n, s = 32, 4
+    ident = np.arange(n)
+    load = pair_load(ident, s)
+    assert load.sum() == n
+    np.testing.assert_array_equal(load, np.diag([n // s] * s))
+    adv = np.roll(ident, -(n // s))
+    assert max_pair_load(adv, s) == n // s
+    assert pair_capacity(n, s, 1.0) == n // s // s + 1
+    with pytest.raises(ValueError, match="drop rows"):
+        assert_pair_capacity(adv, s, slack=1.0)
+    # generous slack passes
+    assert_pair_capacity(adv, s, slack=float(s))

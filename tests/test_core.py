@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _propshim import given, settings, strategies as st
 
 from repro.core import collector as C
 from repro.core.bn_policy import fedavg, aggregate_bn_state, is_bn_path
@@ -226,6 +226,42 @@ def test_collector_alpha_one_is_global():
     coll = GlobalCollector(4, alpha=1.0)
     perm = np.asarray(coll.make_pool_perm(key, 12))
     assert sorted(perm.tolist()) == list(range(12))
+
+
+# --------------------------------------------------------------------------
+# permutation invariants (balanced collector + flush groups)
+
+@settings(max_examples=10, deadline=None)
+@given(s=st.sampled_from([2, 4, 8]), m=st.integers(1, 4))
+def test_balanced_perm_is_valid_and_exactly_balanced(s, m):
+    """make_balanced_perm must be a permutation routing exactly
+    b/num_shards = n/s^2 rows between EVERY (src, dst) shard pair — the
+    property that makes it drop-free at slack=1.0."""
+    from repro.core.collector_dist import make_balanced_perm, pair_load
+    n = s * s * m
+    perm = np.asarray(make_balanced_perm(jax.random.PRNGKey(s * 100 + m),
+                                         n, s))
+    assert sorted(perm.tolist()) == list(range(n))
+    load = pair_load(perm, s)
+    np.testing.assert_array_equal(load, np.full((s, s), n // (s * s)))
+
+
+@settings(max_examples=10, deadline=None)
+@given(num=st.integers(2, 5), per_client=st.sampled_from([2, 3, 4]))
+def test_pool_perm_stays_inside_flush_groups(num, per_client):
+    """With alpha<1 the collector flushes in groups; make_pool_perm must
+    never move a row across a flush boundary (here alpha=0.5 -> two pools
+    of ceil(N/2) and floor(N/2) clients)."""
+    from repro.core.collector import GlobalCollector
+    N = 2 * num                       # e.g. alpha=0.5, N=10 -> two 5-pools
+    n = N * per_client
+    coll = GlobalCollector(N, alpha=0.5)
+    perm = np.asarray(coll.make_pool_perm(
+        jax.random.PRNGKey(N * 17 + per_client), n))
+    assert sorted(perm.tolist()) == list(range(n))
+    boundary = num * per_client       # rows of the first 5-client pool
+    assert set(perm[:boundary]) == set(range(boundary))
+    assert set(perm[boundary:]) == set(range(boundary, n))
 
 
 def test_sfpl_epoch_with_partial_alpha_still_learns(tiny_setup):

@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _propshim import given, settings, strategies as st
 
 from repro.data import (
     make_synthetic_cifar, partition_positive_labels, partition_iid,
