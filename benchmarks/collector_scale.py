@@ -11,7 +11,9 @@ times one SFPL epoch with
 Forced host devices stand in for a real accelerator mesh, so *wall-clock
 speedups here are not the point* — the benchmark pins down the sweep
 harness, verifies both engines agree at every size, and records the
-per-size loss deltas + timings that a TPU run would fill in.
+per-size loss deltas + timings that a TPU run would fill in. Each record
+also carries per-phase timings (perm build / all_to_all exchange / server
+update) so the CPU-harness overhead can be localized.
 
 Run:  PYTHONPATH=src python benchmarks/collector_scale.py \
           [--epochs 2] [--out BENCH_collector.json] [--use-kernel]
@@ -33,6 +35,7 @@ import numpy as np
 
 from repro.core import engine as E
 from repro.core import engine_dist as ED
+from repro.core.collector_dist import make_balanced_perm, shuffle_shard_map
 from repro.data import make_synthetic_cifar, partition_positive_labels
 from repro.models import resnet as R
 from repro.optim import sgd_momentum
@@ -68,6 +71,56 @@ def time_epochs(step, key, st, epochs):
     return (time.time() - t0) / epochs, np.concatenate(losses)
 
 
+def _time_fn(fn, *args, reps=10):
+    out = fn(*args)                  # warmup/compile
+    jax.block_until_ready(out)
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / reps
+
+
+def bench_phases(data_sh, split, opt, st_sh, mesh, num_clients, batch_size,
+                 *, use_kernel):
+    """Per-phase timings of the sharded SFPL step — perm build, all_to_all
+    exchange, server update — to localize where the wall-clock goes (the
+    CPU-harness overhead recorded in BENCH_collector.json)."""
+    n_pool = num_clients * batch_size
+    xb = jax.lax.dynamic_slice_in_dim(data_sh["x"], 0, batch_size, axis=1)
+    A, _ = jax.jit(jax.vmap(
+        lambda cp, cs, x: split.client_fwd(cp, cs, x, True, None)))(
+        st_sh["cp"], st_sh["cbn"], xb)
+    a_pool = A.reshape((n_pool,) + A.shape[2:])
+    y_pool = jax.lax.dynamic_slice_in_dim(
+        data_sh["y"], 0, batch_size, axis=1).reshape((n_pool,))
+    key = jax.random.PRNGKey(2)
+
+    perm_fn = jax.jit(lambda k: make_balanced_perm(k, n_pool, SHARDS))
+    t_perm = _time_fn(perm_fn, key)
+    perm = perm_fn(key)
+
+    exch_fn = jax.jit(lambda a, p: shuffle_shard_map(
+        a, p, mesh=mesh, slack=1.0, use_kernel=use_kernel))
+    t_exch = _time_fn(exch_fn, a_pool, perm)
+    a_shuf = exch_fn(a_pool, perm)
+    y_shuf = jax.jit(lambda y, p: shuffle_shard_map(
+        y, p, mesh=mesh, slack=1.0))(y_pool, perm)
+
+    def server_update(sp, sopt, a, y):
+        def srv_loss(sp_):
+            loss, (nss, _) = split.server_loss(sp_, st_sh["sbn"], a, y,
+                                               True, None)
+            return loss, nss
+        (loss, _), g_sp = jax.value_and_grad(srv_loss, has_aux=True)(sp)
+        sp_new, sopt_new = opt.update(g_sp, sopt, sp, st_sh["step"])
+        return loss, sp_new, sopt_new
+    t_srv = _time_fn(jax.jit(server_update), st_sh["sp"], st_sh["sopt"],
+                     a_shuf, y_shuf)
+    return {"perm_build_s": t_perm, "exchange_s": t_exch,
+            "server_update_s": t_srv}
+
+
 def bench_config(num_clients, batch_size, *, epochs, use_kernel):
     cfg, data, split, opt, st0 = build(num_clients, batch_size)
     st0_host = jax.tree_util.tree_map(np.asarray, st0)
@@ -87,6 +140,11 @@ def bench_config(num_clients, batch_size, *, epochs, use_kernel):
         jax.tree_util.tree_map(jnp.asarray, st0_host), mesh)
     t_sharded, l_sharded = time_epochs(sharded, key, st_sh, epochs)
 
+    st_ph = ED.shard_dcml_state(
+        jax.tree_util.tree_map(jnp.asarray, st0_host), mesh)
+    phases = bench_phases(data_sh, split, opt, st_ph, mesh, num_clients,
+                          batch_size, use_kernel=use_kernel)
+
     rec = {
         "num_clients": num_clients,
         "batch_size": batch_size,
@@ -98,10 +156,14 @@ def bench_config(num_clients, batch_size, *, epochs, use_kernel):
         "sec_per_epoch_sharded": t_sharded,
         "speedup": t_single / t_sharded,
         "max_loss_delta": float(np.abs(l_single - l_sharded).max()),
+        "phases": phases,
     }
     print(f"N={num_clients:3d} B={batch_size:3d} pooled={rec['pooled_batch']:4d}  "
           f"single {t_single:.3f}s  sharded {t_sharded:.3f}s  "
-          f"dloss {rec['max_loss_delta']:.2e}", flush=True)
+          f"dloss {rec['max_loss_delta']:.2e}  "
+          f"[perm {phases['perm_build_s']*1e3:.1f}ms | exch "
+          f"{phases['exchange_s']*1e3:.1f}ms | srv "
+          f"{phases['server_update_s']*1e3:.1f}ms]", flush=True)
     return rec
 
 

@@ -1,2 +1,3 @@
 """SFPL core: the paper's contribution as composable JAX modules."""
-from repro.core import collector, bn_policy, engine, evaluate, split_lm
+from repro.core import (collector, bn_policy, engine, evaluate, round,
+                        split_lm)

@@ -64,6 +64,34 @@ def uncollect(pooled_tree, num_clients):
         lambda x: x.reshape((num_clients, -1) + x.shape[1:]), pooled_tree)
 
 
+def flush_group_sizes(num_clients, alpha):
+    """Clients per collector flush under the paper's accumulation threshold:
+    the collector flushes every ceil(alpha*N) client batches, so alpha=1 is
+    one global flush and alpha=0.5 with N=10 gives two 5-client pools."""
+    fc = max(1, min(num_clients, round(alpha * num_clients)))
+    num_flushes = -(-num_clients // fc)
+    return [min(fc, num_clients - f * fc) for f in range(num_flushes)]
+
+
+def make_flush_perm(key, n, num_clients, alpha):
+    """Pool permutation honouring the accumulation threshold: rows are
+    shuffled within contiguous client-major flush groups, never across
+    group boundaries. The canonical single-device collector permutation —
+    the mesh strategies reproduce its group structure with balanced
+    per-group exchanges (collector_dist.make_grouped_balanced_perm)."""
+    groups = flush_group_sizes(num_clients, alpha)
+    if len(groups) <= 1:
+        return make_permutation(key, n)
+    per_client = n // num_clients
+    parts, start = [], 0
+    for f, c in enumerate(groups):
+        size = c * per_client
+        sub = make_permutation(jax.random.fold_in(key, f), size)
+        parts.append(sub + start)
+        start += size
+    return jnp.concatenate(parts)
+
+
 def distributed_shuffle(x, perm):
     """Mesh-aware collector: ``x`` is the pooled global batch whose leading
     axis is sharded over ("pod","data")). A gather by a global permutation is
@@ -91,25 +119,10 @@ class GlobalCollector:
         self.use_kernel = use_kernel
 
     def make_pool_perm(self, key, n):
-        """Permutation honouring the paper's accumulation threshold: the
-        collector flushes every ceil(alpha*N) client batches, so rows are
-        shuffled within contiguous flush groups (alpha=1 -> one global
-        shuffle; alpha=0.5 with N=10 -> two independent 5-client pools)."""
-        N = self.num_clients
-        flush_clients = max(1, min(N, round(self.alpha * N)))
-        num_flushes = -(-N // flush_clients)
-        if num_flushes <= 1:
-            return make_permutation(key, n)
-        per_client = n // N
-        parts = []
-        start = 0
-        for f in range(num_flushes):
-            c = min(flush_clients, N - f * flush_clients)
-            size = c * per_client
-            sub = make_permutation(jax.random.fold_in(key, f), size)
-            parts.append(sub + start)
-            start += size
-        return jnp.concatenate(parts)
+        """Permutation honouring the paper's accumulation threshold (see
+        ``make_flush_perm``): alpha=1 -> one global shuffle; alpha=0.5 with
+        N=10 -> two independent 5-client pools."""
+        return make_flush_perm(key, n, self.num_clients, self.alpha)
 
     def shuffle_pool(self, key, per_client_acts, per_client_labels):
         pooled = collect({"a": per_client_acts, "y": per_client_labels})

@@ -77,6 +77,79 @@ def make_balanced_perm(key, n, num_shards):
     return p1[p2[p3]]
 
 
+def group_fits_slabs(start, size, b):
+    """Whether a contiguous flush group of ``size`` rows at ``start`` can
+    be permuted without crossing a shard slab mid-group: it either covers
+    whole ``b``-row slabs (balanced exchange) or lives entirely inside one
+    (in-place shuffle, no exchange). The single predicate shared by the
+    eager layout validator and the perm builder."""
+    aligned = start % b == 0 and size % b == 0
+    in_slab = start // b == (start + size - 1) // b
+    return aligned, in_slab
+
+
+def make_grouped_balanced_perm(key, n, num_shards, group_sizes):
+    """Per-flush-group balanced permutations aligned to shard boundaries.
+
+    ``group_sizes`` are contiguous row counts (summing to n) of the
+    collector's flush groups (``collector.flush_group_sizes`` times the
+    per-client rows). Rows never cross a group boundary — the sharded
+    counterpart of ``collector.make_flush_perm`` — and within each group
+    spanning S_g whole shards the permutation is a balanced exchange that
+    routes exactly b/S_g rows between every shard pair of the group. A
+    group contained in a single shard slab shuffles uniformly in place
+    (no exchange). Requires every group to cover whole slabs or live
+    inside one, and b divisible by S_g.
+    """
+    if len(group_sizes) <= 1:
+        return make_balanced_perm(key, n, num_shards)
+    b = n // num_shards
+    parts, start = [], 0
+    for f, size in enumerate(group_sizes):
+        aligned, in_slab = group_fits_slabs(start, size, b)
+        assert aligned or in_slab, (start, size, b)
+        kf = jax.random.fold_in(key, f)
+        if aligned and size // b > 1:
+            sub = make_balanced_perm(kf, size, size // b)
+        else:
+            sub = jax.random.permutation(kf, size)
+        parts.append(sub + start)
+        start += size
+    return jnp.concatenate(parts)
+
+
+def grouped_perm_slack(n, num_shards, group_sizes):
+    """Slack sizing the exchange buckets for a grouped balanced permutation:
+    a group spanning S_g whole shards loads b/S_g rows on each of its shard
+    pairs; groups inside a single slab keep all rows resident (self-pair
+    load up to b). The buffer must hold the worst load. One global flush at
+    b % S == 0 resolves to exactly 1.0, the drop-free balanced default."""
+    b = n // num_shards
+    req = max((b // (size // b)) if size % b == 0 else b
+              for size in group_sizes)
+    return req * num_shards / b
+
+
+def uniform_auto_slack(n, num_shards, group_sizes=None, *, probes=16,
+                       seed=0, margin=1):
+    """Auto-size the exchange slack for paper-faithful uniform shuffles by
+    probing ``max_pair_load`` over sample permutations (honouring flush
+    groups when given) and padding by ``margin`` rows. The bound is
+    empirical, not worst-case — pair it with ``check_capacity=True`` so an
+    unlucky draw raises instead of silently dropping rows."""
+    rng = np.random.default_rng(seed)
+    sizes = list(group_sizes) if group_sizes else [n]
+    worst = 0
+    for _ in range(probes):
+        parts, start = [], 0
+        for size in sizes:
+            parts.append(rng.permutation(size) + start)
+            start += size
+        worst = max(worst, max_pair_load(np.concatenate(parts), num_shards))
+    b = n // num_shards
+    return (worst + margin) * num_shards / b
+
+
 def mesh_axis_size(mesh, axis):
     """Number of shards along ``axis`` of a mesh."""
     return dict(zip(mesh.axis_names, mesh.devices.shape))[axis]
@@ -207,7 +280,7 @@ def _shuffle_impl(x, perm, *, mesh, axis, slack, use_kernel,
         send_pos = jnp.zeros((n_shards, cap), jnp.int32)
         slot_d = dsorted
         slot_r = jnp.minimum(rank, cap - 1)
-        rows_sorted = local_permute(x_loc, order % b)
+        rows_sorted = local_permute(x_loc, order)
         send = send.at[slot_d, slot_r].set(rows_sorted)
         send_pos = send_pos.at[slot_d, slot_r].set(out_pos[order])
         valid = jnp.zeros((n_shards, cap), bool).at[slot_d, slot_r].set(

@@ -17,6 +17,12 @@ Simulation semantics (single host, jit-compiled):
 The engine is generic over a ``SplitModel`` (client_fwd / server_loss /
 full_loss closures) so the same machinery drives ResNets (paper) and the
 cut-transformer LM variants.
+
+The scheme step bodies live in ``repro.core.round`` — ONE placement-
+agnostic implementation parameterized by collector strategy and placement
+objects. ``sfpl_epoch`` / ``sflv2_epoch`` here are the single-device
+entrypoints (thin wrappers pinning the historical signatures and
+numerics); ``engine_dist`` wraps the same bodies for the mesh.
 """
 from __future__ import annotations
 
@@ -26,8 +32,9 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
-from repro.core import collector as C
+from repro.core import round as RD
 from repro.core.bn_policy import fedavg, aggregate_bn_state
+from repro.core.round import make_client_update  # noqa: F401  (re-export)
 from repro.models.common import softmax_cross_entropy
 
 
@@ -83,26 +90,11 @@ def init_dcml_state(key, init_fn, num_clients, opt_client, opt_server):
 # --------------------------------------------------------------------------
 # SFPL epoch (Algorithm 1 + 2)
 
-def make_client_update(split: SplitModel, opt_c):
-    """Per-client local backprop + optimizer step given routed-back dA.
-
-    Shared by the single-device and the mesh-sharded SFPL engines so the two
-    stay numerically interchangeable by construction.
-    """
-    def client_upd(cp, cbn, copt, x, da, step):
-        def f(cp_):
-            a, ncs = split.client_fwd(cp_, cbn, x, True, None)
-            return a, ncs
-        _, vjp, ncs = jax.vjp(f, cp, has_aux=True)
-        g_cp = vjp(da)[0]
-        cp_new, copt_new = opt_c.update(g_cp, copt, cp, step)
-        return cp_new, copt_new, ncs
-    return client_upd
-
 def sfpl_epoch(key, st, data, split: SplitModel, opt_c, opt_s, *,
                num_clients, batch_size, bn_mode="cmsd", alpha=1.0):
     """data: {"x": (N, n, ...), "y": (N, n)}. One epoch = scan over the
-    n // batch_size local batches.
+    n // batch_size local batches — ``round.sfpl_round`` with the dense
+    single-device collector.
 
     ``bn_mode`` selects the paper's two SFPL aggregation variants:
       * "cmsd" — ClientFedServer EXCLUDES BatchNorm (params + stats stay
@@ -112,57 +104,10 @@ def sfpl_epoch(key, st, data, split: SplitModel, opt_c, opt_s, *,
         inference uses the aggregated running statistics. Wins for IID
         testing (Tables VI, VII).
     """
-    n_local = data["x"].shape[1]
-    steps = n_local // batch_size
-    coll = C.GlobalCollector(num_clients, alpha=alpha)
-
-    def one_step(carry, idx):
-        st, key = carry
-        key, kperm = jax.random.split(key)
-        xb = jax.lax.dynamic_slice_in_dim(data["x"], idx * batch_size,
-                                          batch_size, axis=1)
-        yb = jax.lax.dynamic_slice_in_dim(data["y"], idx * batch_size,
-                                          batch_size, axis=1)
-
-        # 1. client forward (parallel across clients)
-        A, ncbn = jax.vmap(
-            lambda cp, cs, x: split.client_fwd(cp, cs, x, True, None)
-        )(st["cp"], st["cbn"], xb)
-
-        # 2. global collector: pool + shuffle
-        a_shuf, y_shuf, perm = coll.shuffle_pool(kperm, A, yb)
-
-        # 3. one server-side update on the shuffled stack; dA per sample
-        def srv_loss(sp, a):
-            loss, (nss, _) = split.server_loss(sp, st["sbn"], a, y_shuf,
-                                               True, None)
-            return loss, nss
-        (loss, nsbn), (g_sp, g_a) = jax.value_and_grad(
-            srv_loss, argnums=(0, 1), has_aux=True)(st["sp"], a_shuf)
-        sp_new, sopt_new = opt_s.update(g_sp, st["sopt"], st["sp"],
-                                        st["step"])
-
-        # 4. de-shuffle dA and run client backprop locally
-        dA = coll.deshuffle_grads(g_a, perm)
-
-        client_upd = make_client_update(split, opt_c)
-        cp_new, copt_new, ncbn2 = jax.vmap(
-            lambda cp, cbn, copt, x, da: client_upd(cp, cbn, copt, x, da,
-                                                    st["step"]))(
-            st["cp"], ncbn, st["copt"], xb, dA)
-
-        st = dict(st, cp=cp_new, cbn=ncbn2, sp=sp_new, sbn=nsbn,
-                  copt=copt_new, sopt=sopt_new, step=st["step"] + 1)
-        return (st, key), loss
-
-    (st, _), losses = jax.lax.scan(one_step, (st, key),
-                                   jnp.arange(steps))
-
-    # 5. ClientFedServer: FedAvg; BN treatment per bn_mode (see docstring)
-    exclude = bn_mode == "cmsd"
-    st = dict(st, cp=fedavg(st["cp"], exclude_bn=exclude),
-              cbn=aggregate_bn_state(st["cbn"], aggregate=not exclude))
-    return st, losses
+    return RD.sfpl_round(
+        key, st, data, split, opt_c, opt_s, num_clients=num_clients,
+        batch_size=batch_size, bn_mode=bn_mode,
+        collector=RD.SINGLE.collector(num_clients, alpha=alpha))
 
 
 # --------------------------------------------------------------------------
@@ -170,57 +115,10 @@ def sfpl_epoch(key, st, data, split: SplitModel, opt_c, opt_s, *,
 
 def sflv2_epoch(key, st, data, split: SplitModel, opt_c, opt_s, *,
                 num_clients, batch_size, aggregate_bn=True):
-    n_local = data["x"].shape[1]
-    steps = n_local // batch_size
-    order = jax.random.permutation(key, num_clients)
-
-    def per_client(carry, k):
-        st = carry
-        cp_k = jax.tree_util.tree_map(lambda a: a[k], st["cp"])
-        cbn_k = jax.tree_util.tree_map(lambda a: a[k], st["cbn"])
-        copt_k = jax.tree_util.tree_map(lambda a: a[k], st["copt"])
-        xk = data["x"][k]
-        yk = data["y"][k]
-
-        def per_batch(inner, idx):
-            cp, cbn, copt, sp, sbn, sopt, step = inner
-            xb = jax.lax.dynamic_slice_in_dim(xk, idx * batch_size,
-                                              batch_size, axis=0)
-            yb = jax.lax.dynamic_slice_in_dim(yk, idx * batch_size,
-                                              batch_size, axis=0)
-
-            def f(cp_):
-                a, ncs = split.client_fwd(cp_, cbn, xb, True, None)
-                return a, ncs
-            A, vjp, ncbn = jax.vjp(f, cp, has_aux=True)
-
-            def srv_loss(sp_, a):
-                loss, (nss, _) = split.server_loss(sp_, sbn, a, yb, True,
-                                                   None)
-                return loss, nss
-            (loss, nsbn), (g_sp, g_a) = jax.value_and_grad(
-                srv_loss, argnums=(0, 1), has_aux=True)(sp, A)
-            sp_new, sopt_new = opt_s.update(g_sp, sopt, sp, step)
-            g_cp = vjp(g_a)[0]
-            cp_new, copt_new = opt_c.update(g_cp, copt, cp, step)
-            return (cp_new, ncbn, copt_new, sp_new, nsbn, sopt_new,
-                    step + 1), loss
-
-        inner0 = (cp_k, cbn_k, copt_k, st["sp"], st["sbn"], st["sopt"],
-                  st["step"])
-        inner, losses = jax.lax.scan(per_batch, inner0, jnp.arange(steps))
-        cp_k, cbn_k, copt_k, sp, sbn, sopt, step = inner
-        put = lambda t, v: jax.tree_util.tree_map(
-            lambda a, b: a.at[k].set(b), t, v)
-        st = dict(st, cp=put(st["cp"], cp_k), cbn=put(st["cbn"], cbn_k),
-                  copt=put(st["copt"], copt_k), sp=sp, sbn=sbn, sopt=sopt,
-                  step=step)
-        return st, losses
-
-    st, losses = jax.lax.scan(per_client, st, order)
-    st = dict(st, cp=fedavg(st["cp"], exclude_bn=False),
-              cbn=aggregate_bn_state(st["cbn"], aggregate=aggregate_bn))
-    return st, losses
+    return RD.sflv2_round(
+        key, st, data, split, opt_c, opt_s, num_clients=num_clients,
+        batch_size=batch_size, aggregate_bn=aggregate_bn,
+        placement=RD.SINGLE)
 
 
 # --------------------------------------------------------------------------

@@ -1,44 +1,44 @@
-"""Mesh-sharded SFPL round engine (the paper's Algorithm 1 at fleet scale).
+"""Mesh-sharded round engines (the paper's schemes at fleet scale).
 
 ``engine.sfpl_epoch`` simulates every client on one device; the server-side
 update over the pooled smashed-data batch is the scaling bottleneck (the
-same framing as SplitFed, arXiv:2004.12088). This engine shards BOTH the
-client axis and the pooled batch over a ``("data",)`` mesh:
+same framing as SplitFed, arXiv:2004.12088). The entrypoints here run the
+SAME step bodies as the single-device engine — ``repro.core.round`` — with
+a ``DataMesh`` placement over a ``("data",)`` axis:
 
-  * client params / BN state / optimizer state: leading client axis N is
-    sharded, so client forward+backward run data-parallel across the mesh;
-  * the pooled smashed stack (N*B rows, client-major) inherits that
-    sharding — each shard owns the rows of its resident clients;
-  * the global collector shuffle is ``make_balanced_perm`` +
-    ``shuffle_shard_map`` — one explicit ``jax.lax.all_to_all`` per step,
-    drop-free at ``slack=1.0`` by construction;
-  * gradient DE-shuffling is not coded anywhere: the server loss is taken
-    as a function of the *pre-shuffle* pooled stack, so autodiff through
-    the sharded gather emits the inverse all_to_all and hands every client
-    exactly its own activation gradients;
-  * server params stay replicated; their gradient (a mean over the sharded
-    pooled batch) is psum'd by the partitioner.
+  * SFPL: client params / BN state / optimizer state are sharded on the
+    leading client axis; the pooled smashed stack (N*B rows, client-major)
+    inherits that sharding; the collector shuffle is one explicit
+    ``jax.lax.all_to_all`` per step (``MeshAllToAll`` strategy). Gradient
+    DE-shuffling is not coded anywhere: the server loss is a function of
+    the pre-shuffle pooled stack, so autodiff emits the inverse all_to_all.
+    Collector modes: "balanced" (drop-free block permutations; per-flush-
+    group when ``alpha < 1``, aligned to shard boundaries) and "uniform"
+    (paper-faithful uniform shuffle, slack auto-sized from probe
+    ``max_pair_load`` with the in-graph capacity check forced on).
+  * SFLv2: the deliberate sequential client visitation (the catastrophic-
+    forgetting mechanism under study) is preserved; the per-client batch
+    axis — and with it the server-side stream — is sharded instead.
 
 Numerics: the SFPL server update is permutation-invariant (mean loss +
 batch-stat BN over the whole pool), so swapping the uniform pool shuffle
-for the balanced one leaves the loss trajectory unchanged up to float
-reduction order — ``sfpl_epoch_sharded`` matches ``sfpl_epoch`` within
-1e-4 on the same seed (tests/test_engine_dist.py, 8 forced host devices).
+for balanced exchanges leaves the loss trajectory unchanged up to float
+reduction order — every sharded entrypoint matches its single-device
+counterpart within 1e-4 on the same seed (tests/test_engine_dist.py,
+8 forced host devices).
 
-``make_sfpl_epoch_sharded`` jits the epoch with the carried state DONATED,
-so parameter/optimizer buffers are updated in place shard-by-shard.
+``make_sfpl_epoch_sharded`` / ``make_sflv2_epoch_sharded`` jit the epoch
+with the carried state DONATED, so parameter/optimizer buffers are updated
+in place shard-by-shard.
 """
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import collector as C
-from repro.core.bn_policy import fedavg, aggregate_bn_state
-from repro.core.collector_dist import (
-    make_balanced_perm, mesh_axis_size, shuffle_shard_map)
-from repro.core.engine import SplitModel, make_client_update
+from repro.core import round as RD
+from repro.core.collector_dist import group_fits_slabs, mesh_axis_size
+from repro.core.engine import SplitModel, make_client_update  # noqa: F401
 
 
 def make_data_mesh(num_shards=None, *, axis="data"):
@@ -50,104 +50,102 @@ def make_data_mesh(num_shards=None, *, axis="data"):
 def shard_dcml_state(st, mesh, *, axis="data"):
     """Place a ``init_dcml_state`` tree on the mesh: client-stacked leaves
     sharded on their leading (client) axis, server leaves replicated."""
-    shard = NamedSharding(mesh, P(axis))
-    repl = NamedSharding(mesh, P())
-    put = lambda t, s: jax.tree_util.tree_map(
-        lambda a: jax.device_put(a, s), t)
-    return dict(
-        st,
-        cp=put(st["cp"], shard), cbn=put(st["cbn"], shard),
-        copt=put(st["copt"], shard),
-        sp=put(st["sp"], repl), sbn=put(st["sbn"], repl),
-        sopt=put(st["sopt"], repl), step=jax.device_put(st["step"], repl))
+    return RD.DataMesh(mesh, axis).place_state(st)
 
 
 def shard_client_data(data, mesh, *, axis="data"):
     """Shard the per-client dataset {"x": (N, n, ...), "y": (N, n)} over the
     client axis."""
-    shard = NamedSharding(mesh, P(axis))
-    return jax.tree_util.tree_map(lambda a: jax.device_put(a, shard), data)
+    return RD.DataMesh(mesh, axis).place_data(data)
+
+
+def check_sfpl_layout(num_clients, batch_size, n_shards, *, alpha=1.0,
+                      collector_mode="balanced"):
+    """Eager validation of the sharded SFPL layout; raises ValueError with
+    an actionable message before any device work.
+
+    Requirements: clients divide evenly over shards. In balanced mode,
+    every flush group of the ``alpha`` accumulation threshold must cover
+    whole shard slabs (so the grouped permutation never crosses a shard
+    mid-group) or live entirely inside one slab (no exchange needed), and
+    each multi-shard group's shard count must divide the slab so equal
+    blocks can be exchanged. Uniform mode has no alignment requirement —
+    its slack is probed from the actual flush-group structure.
+    """
+    if num_clients % n_shards:
+        raise ValueError(
+            f"num_clients={num_clients} must divide evenly over "
+            f"{n_shards} shards")
+    n_pool = num_clients * batch_size
+    b = n_pool // n_shards
+    rows = [c * batch_size
+            for c in C.flush_group_sizes(num_clients, alpha)]
+    if collector_mode != "balanced":
+        return rows
+    start = 0
+    for size in rows:
+        aligned, in_slab = group_fits_slabs(start, size, b)
+        if not (aligned or in_slab):
+            raise ValueError(
+                f"flush group of {size} rows at offset {start} is not "
+                f"aligned to the {b}-row shard slabs: choose alpha/"
+                f"num_clients/batch_size so every flush group covers whole "
+                f"shards, or use collector_mode='uniform' (num_clients="
+                f"{num_clients}, batch_size={batch_size}, shards="
+                f"{n_shards}, alpha={alpha})")
+        s_g = size // b
+        if aligned and s_g > 1 and b % s_g:
+            raise ValueError(
+                f"balanced exchange needs the {b}-row shard slab divisible "
+                f"by the {s_g} shards each flush group spans "
+                f"(num_clients={num_clients}, batch_size={batch_size}, "
+                f"shards={n_shards}, alpha={alpha})")
+        start += size
+    return rows
+
+
+def fit_shards(num_clients, batch_size, *, scheme="sfpl", alpha=1.0,
+               collector_mode="balanced", max_shards=None):
+    """Largest shard count (up to the visible devices) the layout supports
+    — shared by the launch drivers so every entrypoint degrades to a
+    smaller mesh instead of crashing on indivisible configurations."""
+    max_shards = max_shards or len(jax.devices())
+    for s in range(max_shards, 0, -1):
+        if scheme == "sflv2":
+            if batch_size % s == 0:
+                return s
+            continue
+        try:
+            check_sfpl_layout(num_clients, batch_size, s, alpha=alpha,
+                              collector_mode=collector_mode)
+            return s
+        except ValueError:
+            continue
+    return 1
 
 
 def sfpl_epoch_sharded(key, st, data, split: SplitModel, opt_c, opt_s, *,
                        mesh, num_clients, batch_size, bn_mode="cmsd",
-                       alpha=1.0, use_kernel=False, slack=1.0,
-                       check_capacity=False, axis="data"):
+                       alpha=1.0, use_kernel=False, slack=None,
+                       check_capacity=False, axis="data",
+                       collector_mode="balanced"):
     """Drop-in sharded replacement for ``engine.sfpl_epoch``.
 
-    Constraints: ``num_clients`` divisible by the mesh size S, and the
-    per-shard slab ``num_clients/S * batch_size`` divisible by S (the
-    balanced permutation exchanges equal blocks). ``alpha`` < 1 (partial
-    collector flushes) is not sharded yet — see ROADMAP open items.
+    ``alpha < 1`` runs per-flush-group balanced permutations aligned to
+    shard boundaries; ``collector_mode="uniform"`` swaps in the paper-
+    faithful uniform shuffle with auto-sized slack. ``slack=None``
+    auto-sizes the exchange buffers (1.0 for one balanced global flush).
     """
-    if alpha != 1.0:
-        raise NotImplementedError(
-            "sharded collector currently requires alpha=1.0 (one global "
-            "flush); partial flush groups are a single-device feature")
     n_shards = mesh_axis_size(mesh, axis)
-    assert num_clients % n_shards == 0, (num_clients, n_shards)
-    n_pool = num_clients * batch_size
-    assert (n_pool // n_shards) % n_shards == 0, (n_pool, n_shards)
-
-    n_local = data["x"].shape[1]
-    steps = n_local // batch_size
-    client_upd = make_client_update(split, opt_c)
-
-    def one_step(carry, idx):
-        st, key = carry
-        key, kperm = jax.random.split(key)
-        xb = jax.lax.dynamic_slice_in_dim(data["x"], idx * batch_size,
-                                          batch_size, axis=1)
-        yb = jax.lax.dynamic_slice_in_dim(data["y"], idx * batch_size,
-                                          batch_size, axis=1)
-
-        # 1. client forward, data-parallel over the sharded client axis
-        A, ncbn = jax.vmap(
-            lambda cp, cs, x: split.client_fwd(cp, cs, x, True, None)
-        )(st["cp"], st["cbn"], xb)
-
-        # 2. global collector: pool (client-major rows keep the client
-        # sharding) + balanced shuffle via explicit all_to_all
-        a_pool = A.reshape((n_pool,) + A.shape[2:])
-        y_pool = yb.reshape((n_pool,))
-        perm = make_balanced_perm(kperm, n_pool, n_shards)
-        y_shuf = shuffle_shard_map(y_pool, perm, mesh=mesh, slack=slack,
-                                   check_capacity=check_capacity)
-
-        # 3. ONE server update on the shuffled stack. Differentiating w.r.t.
-        # the PRE-shuffle pool makes autodiff emit the de-shuffling
-        # all_to_all: g_pool arrives already routed back to source clients.
-        def srv_loss(sp, a_pool):
-            a_shuf = shuffle_shard_map(a_pool, perm, mesh=mesh, slack=slack,
-                                       use_kernel=use_kernel,
-                                       check_capacity=check_capacity)
-            loss, (nss, _) = split.server_loss(sp, st["sbn"], a_shuf, y_shuf,
-                                               True, None)
-            return loss, nss
-        (loss, nsbn), (g_sp, g_pool) = jax.value_and_grad(
-            srv_loss, argnums=(0, 1), has_aux=True)(st["sp"], a_pool)
-        sp_new, sopt_new = opt_s.update(g_sp, st["sopt"], st["sp"],
-                                        st["step"])
-
-        # 4. client backprop, data-parallel (dA is sharded like A)
-        dA = g_pool.reshape(A.shape)
-        cp_new, copt_new, ncbn2 = jax.vmap(
-            lambda cp, cbn, copt, x, da: client_upd(cp, cbn, copt, x, da,
-                                                    st["step"]))(
-            st["cp"], ncbn, st["copt"], xb, dA)
-
-        st = dict(st, cp=cp_new, cbn=ncbn2, sp=sp_new, sbn=nsbn,
-                  copt=copt_new, sopt=sopt_new, step=st["step"] + 1)
-        return (st, key), loss
-
-    (st, _), losses = jax.lax.scan(one_step, (st, key), jnp.arange(steps))
-
-    # 5. ClientFedServer: FedAvg across the sharded client axis (all-reduce
-    # under the hood); BN treatment per bn_mode as in sfpl_epoch
-    exclude = bn_mode == "cmsd"
-    st = dict(st, cp=fedavg(st["cp"], exclude_bn=exclude),
-              cbn=aggregate_bn_state(st["cbn"], aggregate=not exclude))
-    return st, losses
+    check_sfpl_layout(num_clients, batch_size, n_shards, alpha=alpha,
+                      collector_mode=collector_mode)
+    placement = RD.DataMesh(mesh, axis)
+    return RD.sfpl_round(
+        key, st, data, split, opt_c, opt_s, num_clients=num_clients,
+        batch_size=batch_size, bn_mode=bn_mode,
+        collector=placement.collector(
+            num_clients, alpha=alpha, mode=collector_mode, slack=slack,
+            use_kernel=use_kernel, check_capacity=check_capacity))
 
 
 def make_sfpl_epoch_sharded(split: SplitModel, opt_c, opt_s, data, *,
@@ -158,4 +156,34 @@ def make_sfpl_epoch_sharded(split: SplitModel, opt_c, opt_s, data, *,
         return sfpl_epoch_sharded(key, st, data, split, opt_c, opt_s,
                                   mesh=mesh, num_clients=num_clients,
                                   batch_size=batch_size, **kw)
+    return jax.jit(epoch, donate_argnums=(1,))
+
+
+def sflv2_epoch_sharded(key, st, data, split: SplitModel, opt_c, opt_s, *,
+                        mesh, num_clients, batch_size, aggregate_bn=True,
+                        axis="data"):
+    """Drop-in sharded replacement for ``engine.sflv2_epoch``: the server
+    stream is sharded over the per-client batch axis while the sequential
+    client-visitation order is preserved bit-for-bit. State and data stay
+    replicated (the visitation loop touches one client at a time); call it
+    under jit (``make_sflv2_epoch_sharded``) so the batch sharding
+    constraints drive the partitioner."""
+    n_shards = mesh_axis_size(mesh, axis)
+    if batch_size % n_shards:
+        raise ValueError(
+            f"batch_size={batch_size} must divide evenly over {n_shards} "
+            f"shards to shard the SFLv2 server stream")
+    return RD.sflv2_round(
+        key, st, data, split, opt_c, opt_s, num_clients=num_clients,
+        batch_size=batch_size, aggregate_bn=aggregate_bn,
+        placement=RD.DataMesh(mesh, axis))
+
+
+def make_sflv2_epoch_sharded(split: SplitModel, opt_c, opt_s, data, *,
+                             mesh, num_clients, batch_size, **kw):
+    """Jitted hot loop: ``(key, st) -> (st, losses)``, state donated."""
+    def epoch(key, st):
+        return sflv2_epoch_sharded(key, st, data, split, opt_c, opt_s,
+                                   mesh=mesh, num_clients=num_clients,
+                                   batch_size=batch_size, **kw)
     return jax.jit(epoch, donate_argnums=(1,))

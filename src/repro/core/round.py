@@ -1,0 +1,353 @@
+"""Placement-agnostic DCML round engine.
+
+The paper's schemes previously lived as two parallel engine stacks —
+``engine.py`` (single-device) and ``engine_dist.py`` (mesh-sharded SFPL) —
+duplicating the per-step structure and diverging on collector semantics.
+This module is the single implementation both delegate to:
+
+  * a ``Placement`` says WHERE state and batches live: ``SingleDevice``
+    or a ``DataMesh`` over a ``("data",)`` axis;
+  * a ``CollectorStrategy`` says HOW Algorithm 1's collect-shuffle-scatter
+    runs: ``DenseTake`` (one-device ``jnp.take``) or ``MeshAllToAll``
+    (explicit ``all_to_all`` with balanced, grouped-balanced, or uniform
+    permutations and auto-sized exchange slack).
+
+Gradient DE-shuffling is never coded: every strategy's ``permute`` is
+differentiable and the server loss is taken as a function of the
+PRE-shuffle pooled stack, so autodiff emits the inverse route (dense
+scatter or the inverse all_to_all) and hands each client exactly its own
+activation gradients.
+
+Flush groups (the paper's ``alpha`` accumulation threshold) work on every
+placement: ``DenseTake`` shuffles within contiguous client groups, and
+``MeshAllToAll`` builds per-flush-group balanced permutations aligned to
+shard boundaries (``collector_dist.make_grouped_balanced_perm``) with
+slack sized to the worst group's bucket load.
+
+SFLv2's deliberate sequential client visitation (the catastrophic-
+forgetting mechanism under study) is preserved on every placement:
+``sflv2_round`` shards the per-client batch axis — and with it the
+server-side update stream, the scaling bottleneck in SplitFed's framing —
+never the visitation loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import collector as C
+from repro.core.bn_policy import fedavg, aggregate_bn_state
+from repro.core.collector_dist import (
+    grouped_perm_slack, make_grouped_balanced_perm, mesh_axis_size,
+    shuffle_shard_map, uniform_auto_slack)
+
+
+# --------------------------------------------------------------------------
+# placements
+
+@dataclasses.dataclass(frozen=True)
+class SingleDevice:
+    """Everything on one device — the simulation default."""
+
+    def place_state(self, st):
+        return st
+
+    def place_data(self, data):
+        return data
+
+    def constrain_batch(self, tree):
+        return tree
+
+    def collector(self, num_clients, *, alpha=1.0, use_kernel=False, **_):
+        return DenseTake(num_clients=num_clients, alpha=alpha,
+                         use_kernel=use_kernel)
+
+
+SINGLE = SingleDevice()
+
+
+@dataclasses.dataclass(frozen=True)
+class DataMesh:
+    """A 1-D device mesh: client-stacked state and the pooled smashed batch
+    are sharded over ``axis``; server state stays replicated."""
+    mesh: object
+    axis: str = "data"
+
+    @property
+    def n_shards(self):
+        return mesh_axis_size(self.mesh, self.axis)
+
+    def place_state(self, st):
+        """Place an ``init_dcml_state`` tree: client-stacked leaves sharded
+        on their leading (client) axis, server leaves replicated."""
+        shard = NamedSharding(self.mesh, P(self.axis))
+        repl = NamedSharding(self.mesh, P())
+        put = lambda t, s: jax.tree_util.tree_map(
+            lambda a: jax.device_put(a, s), t)
+        return dict(
+            st,
+            cp=put(st["cp"], shard), cbn=put(st["cbn"], shard),
+            copt=put(st["copt"], shard),
+            sp=put(st["sp"], repl), sbn=put(st["sbn"], repl),
+            sopt=put(st["sopt"], repl),
+            step=jax.device_put(st["step"], repl))
+
+    def place_data(self, data):
+        """Shard the per-client dataset {"x": (N, n, ...), "y": (N, n)} over
+        the client axis."""
+        shard = NamedSharding(self.mesh, P(self.axis))
+        return jax.tree_util.tree_map(
+            lambda a: jax.device_put(a, shard), data)
+
+    def constrain_batch(self, tree):
+        """Shard the leading (batch) axis of every leaf — the SFLv2 server
+        stream runs data-parallel over the mesh without touching the
+        sequential visitation order."""
+        def c(a):
+            spec = P(self.axis) if a.ndim >= 1 else P()
+            return jax.lax.with_sharding_constraint(
+                a, NamedSharding(self.mesh, spec))
+        return jax.tree_util.tree_map(c, tree)
+
+    def collector(self, num_clients, *, alpha=1.0, mode="balanced",
+                  slack=None, use_kernel=False, check_capacity=False):
+        return MeshAllToAll(mesh=self.mesh, num_clients=num_clients,
+                            axis=self.axis, mode=mode, alpha=alpha,
+                            slack=slack, use_kernel=use_kernel,
+                            check_capacity=check_capacity)
+
+
+# --------------------------------------------------------------------------
+# collector strategies
+
+@dataclasses.dataclass(frozen=True)
+class DenseTake:
+    """Algorithm 1's collector as a dense gather on one device."""
+    num_clients: int
+    alpha: float = 1.0
+    use_kernel: bool = False
+
+    def make_perm(self, key, n):
+        return C.make_flush_perm(key, n, self.num_clients, self.alpha)
+
+    def permute(self, x, perm):
+        if self.use_kernel and jnp.issubdtype(x.dtype, jnp.floating):
+            return C.shuffle(x, perm, use_kernel=True)
+        return jnp.take(x, perm, axis=0)
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshAllToAll:
+    """Algorithm 1's collector as one explicit ``all_to_all`` per step.
+
+    ``mode``:
+      * "balanced" — balanced block permutations (grouped when alpha < 1),
+        drop-free by construction at the auto-sized slack;
+      * "uniform"  — the paper-faithful uniform shuffle (identical perm
+        distribution to ``DenseTake``), with slack auto-sized from probe
+        ``max_pair_load`` draws and the in-graph capacity check forced on
+        so an unlucky permutation raises instead of dropping rows.
+    ``slack=None`` auto-sizes per mode; pass a float to override.
+    """
+    mesh: object
+    num_clients: int
+    axis: str = "data"
+    mode: str = "balanced"
+    alpha: float = 1.0
+    slack: Optional[float] = None
+    use_kernel: bool = False
+    check_capacity: bool = False
+
+    def group_rows(self, n):
+        per_client = n // self.num_clients
+        return [c * per_client
+                for c in C.flush_group_sizes(self.num_clients, self.alpha)]
+
+    def resolved_slack(self, n):
+        if self.slack is not None:
+            return self.slack
+        n_shards = mesh_axis_size(self.mesh, self.axis)
+        rows = self.group_rows(n)
+        if self.mode == "uniform":
+            return uniform_auto_slack(
+                n, n_shards, rows if len(rows) > 1 else None)
+        return grouped_perm_slack(n, n_shards, rows)
+
+    def make_perm(self, key, n):
+        if self.mode == "uniform":
+            return C.make_flush_perm(key, n, self.num_clients, self.alpha)
+        n_shards = mesh_axis_size(self.mesh, self.axis)
+        return make_grouped_balanced_perm(key, n, n_shards,
+                                          self.group_rows(n))
+
+    def permute(self, x, perm):
+        use_k = self.use_kernel and jnp.issubdtype(x.dtype, jnp.floating)
+        check = self.check_capacity or (self.mode == "uniform"
+                                        and self.slack is None)
+        return shuffle_shard_map(
+            x, perm, mesh=self.mesh, axis=self.axis,
+            slack=self.resolved_slack(x.shape[0]),
+            use_kernel=use_k, check_capacity=check)
+
+
+# --------------------------------------------------------------------------
+# shared step pieces
+
+def make_client_update(split, opt_c):
+    """Per-client local backprop + optimizer step given routed-back dA.
+
+    Built ONCE per epoch (hoisted out of the scan body) and shared by every
+    placement, so the engines stay numerically interchangeable by
+    construction.
+    """
+    def client_upd(cp, cbn, copt, x, da, step):
+        def f(cp_):
+            a, ncs = split.client_fwd(cp_, cbn, x, True, None)
+            return a, ncs
+        _, vjp, ncs = jax.vjp(f, cp, has_aux=True)
+        g_cp = vjp(da)[0]
+        cp_new, copt_new = opt_c.update(g_cp, copt, cp, step)
+        return cp_new, copt_new, ncs
+    return client_upd
+
+
+# --------------------------------------------------------------------------
+# SFPL round (Algorithm 1 + 2), one body for every placement
+
+def sfpl_round(key, st, data, split, opt_c, opt_s, *, num_clients,
+               batch_size, bn_mode="cmsd", collector):
+    """One SFPL epoch: scan over the n // batch_size local batches.
+
+    ``collector`` is the strategy object (``DenseTake`` / ``MeshAllToAll``)
+    that realises the global collector; everything else — client forward,
+    ONE server update over the pooled shuffled stack, gradient routing,
+    local client updates, epoch-end ClientFedServer — is placement-
+    agnostic. ``bn_mode`` selects the paper's aggregation variants:
+    "cmsd" excludes BatchNorm from ClientFedServer, "rmsd" aggregates it.
+    """
+    n_local = data["x"].shape[1]
+    steps = n_local // batch_size
+    n_pool = num_clients * batch_size
+    client_upd = make_client_update(split, opt_c)
+
+    def one_step(carry, idx):
+        st, key = carry
+        key, kperm = jax.random.split(key)
+        xb = jax.lax.dynamic_slice_in_dim(data["x"], idx * batch_size,
+                                          batch_size, axis=1)
+        yb = jax.lax.dynamic_slice_in_dim(data["y"], idx * batch_size,
+                                          batch_size, axis=1)
+
+        # 1. client forward, parallel over the (possibly sharded) client axis
+        A, ncbn = jax.vmap(
+            lambda cp, cs, x: split.client_fwd(cp, cs, x, True, None)
+        )(st["cp"], st["cbn"], xb)
+
+        # 2. global collector: pool client-major (rows inherit the client
+        # sharding, if any) and shuffle per the strategy
+        a_pool = A.reshape((n_pool,) + A.shape[2:])
+        y_pool = yb.reshape((n_pool,))
+        perm = collector.make_perm(kperm, n_pool)
+        y_shuf = collector.permute(y_pool, perm)
+
+        # 3. ONE server update on the shuffled stack. Differentiating w.r.t.
+        # the PRE-shuffle pool makes autodiff emit the de-shuffle (dense
+        # scatter or inverse all_to_all): g_pool arrives already routed
+        # back to source clients.
+        def srv_loss(sp, a_pool):
+            a_shuf = collector.permute(a_pool, perm)
+            loss, (nss, _) = split.server_loss(sp, st["sbn"], a_shuf,
+                                               y_shuf, True, None)
+            return loss, nss
+        (loss, nsbn), (g_sp, g_pool) = jax.value_and_grad(
+            srv_loss, argnums=(0, 1), has_aux=True)(st["sp"], a_pool)
+        sp_new, sopt_new = opt_s.update(g_sp, st["sopt"], st["sp"],
+                                        st["step"])
+
+        # 4. client backprop, parallel (dA is pooled like A)
+        dA = g_pool.reshape(A.shape)
+        cp_new, copt_new, ncbn2 = jax.vmap(
+            lambda cp, cbn, copt, x, da: client_upd(cp, cbn, copt, x, da,
+                                                    st["step"]))(
+            st["cp"], ncbn, st["copt"], xb, dA)
+
+        st = dict(st, cp=cp_new, cbn=ncbn2, sp=sp_new, sbn=nsbn,
+                  copt=copt_new, sopt=sopt_new, step=st["step"] + 1)
+        return (st, key), loss
+
+    (st, _), losses = jax.lax.scan(one_step, (st, key), jnp.arange(steps))
+
+    # 5. ClientFedServer: FedAvg across the client axis (an all-reduce when
+    # sharded); BN treatment per bn_mode
+    exclude = bn_mode == "cmsd"
+    st = dict(st, cp=fedavg(st["cp"], exclude_bn=exclude),
+              cbn=aggregate_bn_state(st["cbn"], aggregate=not exclude))
+    return st, losses
+
+
+# --------------------------------------------------------------------------
+# SFLv2 round (baseline under study), one body for every placement
+
+def sflv2_round(key, st, data, split, opt_c, opt_s, *, num_clients,
+                batch_size, aggregate_bn=True, placement=SINGLE):
+    """One SFLv2 epoch: clients visited SEQUENTIALLY in random order — this
+    catastrophic-forgetting structure is the object of study and is never
+    parallelized. ``placement`` shards the per-client batch axis instead,
+    so the server-side stream (the scaling bottleneck) runs data-parallel
+    while the visitation order is bit-for-bit preserved."""
+    n_local = data["x"].shape[1]
+    steps = n_local // batch_size
+    order = jax.random.permutation(key, num_clients)
+
+    def per_client(carry, k):
+        st = carry
+        cp_k = jax.tree_util.tree_map(lambda a: a[k], st["cp"])
+        cbn_k = jax.tree_util.tree_map(lambda a: a[k], st["cbn"])
+        copt_k = jax.tree_util.tree_map(lambda a: a[k], st["copt"])
+        xk = data["x"][k]
+        yk = data["y"][k]
+
+        def per_batch(inner, idx):
+            cp, cbn, copt, sp, sbn, sopt, step = inner
+            xb = jax.lax.dynamic_slice_in_dim(xk, idx * batch_size,
+                                              batch_size, axis=0)
+            yb = jax.lax.dynamic_slice_in_dim(yk, idx * batch_size,
+                                              batch_size, axis=0)
+            xb, yb = placement.constrain_batch((xb, yb))
+
+            def f(cp_):
+                a, ncs = split.client_fwd(cp_, cbn, xb, True, None)
+                return a, ncs
+            A, vjp, ncbn = jax.vjp(f, cp, has_aux=True)
+
+            def srv_loss(sp_, a):
+                loss, (nss, _) = split.server_loss(sp_, sbn, a, yb, True,
+                                                   None)
+                return loss, nss
+            (loss, nsbn), (g_sp, g_a) = jax.value_and_grad(
+                srv_loss, argnums=(0, 1), has_aux=True)(sp, A)
+            sp_new, sopt_new = opt_s.update(g_sp, sopt, sp, step)
+            g_cp = vjp(g_a)[0]
+            cp_new, copt_new = opt_c.update(g_cp, copt, cp, step)
+            return (cp_new, ncbn, copt_new, sp_new, nsbn, sopt_new,
+                    step + 1), loss
+
+        inner0 = (cp_k, cbn_k, copt_k, st["sp"], st["sbn"], st["sopt"],
+                  st["step"])
+        inner, losses = jax.lax.scan(per_batch, inner0, jnp.arange(steps))
+        cp_k, cbn_k, copt_k, sp, sbn, sopt, step = inner
+        put = lambda t, v: jax.tree_util.tree_map(
+            lambda a, b: a.at[k].set(b), t, v)
+        st = dict(st, cp=put(st["cp"], cp_k), cbn=put(st["cbn"], cbn_k),
+                  copt=put(st["copt"], copt_k), sp=sp, sbn=sbn, sopt=sopt,
+                  step=step)
+        return st, losses
+
+    st, losses = jax.lax.scan(per_client, st, order)
+    st = dict(st, cp=fedavg(st["cp"], exclude_bn=False),
+              cbn=aggregate_bn_state(st["cbn"], aggregate=aggregate_bn))
+    return st, losses

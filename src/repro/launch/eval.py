@@ -1,7 +1,16 @@
-"""LM evaluation: perplexity / token accuracy over a token stream.
+"""Evaluation drivers.
+
+LM mode (default): perplexity / token accuracy over a token stream.
+Paper mode (``--paper``): the SFPL-vs-SFLv2 comparison AT MATCHED FLEET
+SIZE — both schemes trained through the same placement-agnostic round
+engine (optionally ``--sharded`` on a mesh over all visible devices) and
+evaluated on the same held-out set, the comparison the IoT end-to-end
+evaluation (arXiv:2003.13376) argues is the only meaningful one.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.eval --arch qwen3-8b --batches 8
+  PYTHONPATH=src python -m repro.launch.eval --paper [--sharded] \
+      [--clients 8] [--epochs 4] [--alpha 1.0]
 """
 from __future__ import annotations
 
@@ -50,12 +59,97 @@ def evaluate_lm(spec, cfg, params, *, batches=8, batch=8, seq=64, seed=0):
             "token_accuracy": tot_acc / batches}
 
 
+def evaluate_paper(*, num_clients=8, epochs=4, batch_size=8, sharded=False,
+                   alpha=1.0, depth=8, width=8, hw=8, lr=0.05, seed=0):
+    """Train SFPL and SFLv2 through the unified round engine on the same
+    data, fleet size, and placement; return accuracy under BOTH test
+    protocols (IID and non-IID batches) per scheme, so the head-to-head
+    comparison is not confounded by the evaluation protocol. Each scheme
+    is evaluated with the BN treatment it trained with (SFPL: CMSD,
+    batch statistics; SFLv2: RMSD, aggregated running statistics)."""
+    from repro.core import engine as E
+    from repro.core.evaluate import evaluate_split_iid, evaluate_split_noniid
+    from repro.data import make_synthetic_cifar, partition_positive_labels
+    from repro.models import resnet as R
+    from repro.optim import sgd_momentum
+
+    cfg = R.ResNetConfig(depth=depth, num_classes=num_clients, width=width)
+    key = jax.random.PRNGKey(seed)
+    tx, ty, ex, ey = make_synthetic_cifar(
+        key, num_classes=num_clients, train_per_class=4 * batch_size,
+        test_per_class=2 * batch_size, hw=hw)
+    data = partition_positive_labels(tx, ty, num_clients)
+    split = E.make_resnet_split(cfg)
+    opt = sgd_momentum(lr, momentum=0.9, weight_decay=5e-4)
+
+    def run(scheme):
+        st = E.init_dcml_state(jax.random.PRNGKey(seed),
+                               lambda k: R.init(k, cfg), num_clients,
+                               opt, opt)
+        if sharded:
+            from repro.core import engine_dist as ED
+            shards = ED.fit_shards(num_clients, batch_size, scheme=scheme,
+                                   alpha=alpha)
+            mesh = ED.make_data_mesh(shards)
+            if scheme == "sfpl":
+                st = ED.shard_dcml_state(st, mesh)
+                epoch = ED.make_sfpl_epoch_sharded(
+                    split, opt, opt, ED.shard_client_data(data, mesh),
+                    mesh=mesh, num_clients=num_clients,
+                    batch_size=batch_size, alpha=alpha)
+            else:
+                epoch = ED.make_sflv2_epoch_sharded(
+                    split, opt, opt, data, mesh=mesh,
+                    num_clients=num_clients, batch_size=batch_size)
+        elif scheme == "sfpl":
+            epoch = jax.jit(lambda k, s: E.sfpl_epoch(
+                k, s, data, split, opt, opt, num_clients=num_clients,
+                batch_size=batch_size, alpha=alpha))
+        else:
+            epoch = jax.jit(lambda k, s: E.sflv2_epoch(
+                k, s, data, split, opt, opt, num_clients=num_clients,
+                batch_size=batch_size))
+        k = jax.random.PRNGKey(seed + 1)
+        for _ in range(epochs):
+            k, ke = jax.random.split(k)
+            st, _ = epoch(ke, st)
+        rmsd = scheme == "sflv2"
+        return {
+            "iid": evaluate_split_iid(st, split, ex, ey, num_clients,
+                                      rmsd=rmsd, batch=2 * batch_size),
+            "noniid": evaluate_split_noniid(st, split, ex, ey,
+                                            num_clients, rmsd=rmsd,
+                                            batch=2 * batch_size),
+        }
+
+    return {"sfpl": run("sfpl"), "sflv2": run("sflv2"),
+            "num_clients": num_clients, "sharded": sharded}
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-8b")
     ap.add_argument("--batches", type=int, default=8)
     ap.add_argument("--ckpt")
+    ap.add_argument("--paper", action="store_true",
+                    help="SFPL vs SFLv2 at matched fleet size")
+    ap.add_argument("--sharded", action="store_true",
+                    help="run both schemes on a mesh (with --paper)")
+    ap.add_argument("--clients", type=int, default=8)
+    ap.add_argument("--epochs", type=int, default=4)
+    ap.add_argument("--alpha", type=float, default=1.0)
     args = ap.parse_args()
+    if args.paper:
+        rep = evaluate_paper(num_clients=args.clients, epochs=args.epochs,
+                             sharded=args.sharded, alpha=args.alpha)
+        chance = 100.0 / args.clients
+        print(f"matched fleet ({args.clients} clients, "
+              f"sharded={args.sharded}, chance {chance:.1f}%):")
+        for scheme in ("sfpl", "sflv2"):
+            r = rep[scheme]
+            print(f"  {scheme:5s}  IID test {r['iid']['accuracy']:5.1f}%  "
+                  f"non-IID test {r['noniid']['accuracy']:5.1f}%")
+        return
     spec = get_arch(args.arch)
     cfg = spec.make_smoke_config()
     params = spec.model.init(jax.random.PRNGKey(0), cfg)

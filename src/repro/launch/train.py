@@ -5,20 +5,23 @@ Two modes:
     synthetic Markov token stream — runnable on CPU, demonstrates the full
     step (optimizer, schedule, checkpointing) and the SFPL collector option
     (``--sfpl`` inserts the cut-layer shuffle into the jitted step).
-  * Paper mode (``--paper``): the SFPL round engine on the synthetic
-    CIFAR-like set with a split ResNet. ``--sharded`` swaps in the
-    mesh-sharded engine (``engine_dist.sfpl_epoch_sharded``): clients and
-    the pooled smashed-data batch are sharded over a ("data",) mesh across
-    all visible devices, the collector shuffle runs as an explicit
-    all_to_all, and ``--use-kernel`` routes the local permute through the
-    Pallas collector kernel. To simulate a mesh on CPU, set
+  * Paper mode (``--paper``): a DCML round engine on the synthetic
+    CIFAR-like set with a split ResNet. ``--scheme`` picks SFPL (default)
+    or the SFLv2 baseline; ``--sharded`` runs the same round body on a
+    ("data",) mesh across all visible devices (SFPL: clients + pooled
+    smashed batch sharded, collector as an explicit all_to_all in
+    ``--collector {balanced,uniform}`` mode with flush threshold
+    ``--alpha``; SFLv2: the server stream sharded over the batch axis).
+    ``--use-kernel`` routes the local permute through the Pallas collector
+    kernel. To simulate a mesh on CPU, set
     XLA_FLAGS=--xla_force_host_platform_device_count=8 before launching.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.train --arch qwen3-8b --smoke \
       --steps 50 [--sfpl] [--ckpt out.npz]
   PYTHONPATH=src python -m repro.launch.train --paper --sharded \
-      --clients 8 --epochs 4 [--use-kernel]
+      --clients 8 --epochs 4 [--scheme sflv2] [--alpha 0.5] \
+      [--collector uniform] [--use-kernel]
 """
 from __future__ import annotations
 
@@ -79,10 +82,14 @@ def train_lm(arch_id, *, steps=50, batch=8, seq=64, smoke=True, sfpl=False,
 
 def train_paper(*, num_clients=8, epochs=4, batch_size=8, sharded=False,
                 use_kernel=False, depth=8, width=8, hw=8, lr=0.05,
+                scheme="sfpl", alpha=1.0, collector="balanced",
                 log_every=1):
-    """SFPL rounds (Algorithm 1 + 2) on synthetic CIFAR, one client per
-    class (only positive labels). ``sharded`` runs the mesh engine over all
-    visible devices."""
+    """DCML rounds on synthetic CIFAR, one client per class (only positive
+    labels). ``scheme`` picks SFPL (Algorithm 1 + 2) or the SFLv2 baseline;
+    ``sharded`` runs the same round body on a mesh over all visible devices
+    (SFPL: clients + pooled batch sharded, collector as all_to_all in
+    ``collector`` mode with flush threshold ``alpha``; SFLv2: the server
+    stream sharded over the batch axis, visitation order preserved)."""
     from repro.core import engine as E
     from repro.core.evaluate import evaluate_split_noniid
     from repro.data import make_synthetic_cifar, partition_positive_labels
@@ -103,21 +110,36 @@ def train_paper(*, num_clients=8, epochs=4, batch_size=8, sharded=False,
     if sharded:
         from repro.core import engine_dist as ED
         n_dev = len(jax.devices())
-        shards = max(s for s in range(1, n_dev + 1)
-                     if num_clients % s == 0
-                     and (num_clients * batch_size // s) % s == 0)
-        mesh = ED.make_data_mesh(shards)
-        print(f"sharded SFPL: {shards}-way data mesh over {n_dev} "
-              f"device(s), use_kernel={use_kernel}")
-        data_dev = ED.shard_client_data(data, mesh)
-        st = ED.shard_dcml_state(st, mesh)
-        epoch = ED.make_sfpl_epoch_sharded(
-            split, opt, opt, data_dev, mesh=mesh, num_clients=num_clients,
-            batch_size=batch_size, use_kernel=use_kernel)
+        if scheme == "sflv2":
+            shards = ED.fit_shards(num_clients, batch_size, scheme="sflv2")
+            mesh = ED.make_data_mesh(shards)
+            print(f"sharded SFLv2: server stream over a {shards}-way mesh "
+                  f"({n_dev} device(s)), sequential visitation preserved")
+            epoch = ED.make_sflv2_epoch_sharded(
+                split, opt, opt, data, mesh=mesh, num_clients=num_clients,
+                batch_size=batch_size)
+        else:
+            shards = ED.fit_shards(num_clients, batch_size, alpha=alpha,
+                                   collector_mode=collector)
+            mesh = ED.make_data_mesh(shards)
+            print(f"sharded SFPL: {shards}-way data mesh over {n_dev} "
+                  f"device(s), collector={collector}, alpha={alpha}, "
+                  f"use_kernel={use_kernel}")
+            data_dev = ED.shard_client_data(data, mesh)
+            st = ED.shard_dcml_state(st, mesh)
+            epoch = ED.make_sfpl_epoch_sharded(
+                split, opt, opt, data_dev, mesh=mesh,
+                num_clients=num_clients, batch_size=batch_size,
+                use_kernel=use_kernel, alpha=alpha,
+                collector_mode=collector)
+    elif scheme == "sflv2":
+        epoch = jax.jit(lambda k, s: E.sflv2_epoch(
+            k, s, data, split, opt, opt, num_clients=num_clients,
+            batch_size=batch_size))
     else:
         epoch = jax.jit(lambda k, s: E.sfpl_epoch(
             k, s, data, split, opt, opt, num_clients=num_clients,
-            batch_size=batch_size))
+            batch_size=batch_size, alpha=alpha))
 
     key = jax.random.PRNGKey(1)
     t0 = time.time()
@@ -156,6 +178,13 @@ def main():
                     help="mesh-sharded engine (with --paper)")
     ap.add_argument("--use-kernel", action="store_true",
                     help="Pallas collector permute on the sharded path")
+    ap.add_argument("--scheme", default="sfpl", choices=("sfpl", "sflv2"),
+                    help="paper mode: DCML scheme to run")
+    ap.add_argument("--alpha", type=float, default=1.0,
+                    help="SFPL collector accumulation threshold")
+    ap.add_argument("--collector", default="balanced",
+                    choices=("balanced", "uniform"),
+                    help="sharded SFPL collector permutation mode")
     ap.add_argument("--clients", type=int, default=8)
     ap.add_argument("--epochs", type=int, default=4)
     args = ap.parse_args()
@@ -163,6 +192,8 @@ def main():
         losses = train_paper(num_clients=args.clients, epochs=args.epochs,
                              batch_size=args.batch, sharded=args.sharded,
                              use_kernel=args.use_kernel,
+                             scheme=args.scheme, alpha=args.alpha,
+                             collector=args.collector,
                              lr=args.lr if args.lr is not None else 0.05)
     else:
         losses = train_lm(args.arch, steps=args.steps, batch=args.batch,

@@ -7,6 +7,7 @@ import sys
 
 import numpy as np
 import pytest
+from _propshim import given, settings, strategies as st
 
 WORKER = r"""
 import os
@@ -73,7 +74,31 @@ for s in range(8):
     assert len(got) == 8, (s, got)
 print("mixing OK")
 
+# grouped balanced perm (alpha<1 flush groups): exchange at the auto-sized
+# slack is exact and passes the in-graph capacity check
+from repro.core.collector_dist import (
+    make_grouped_balanced_perm, grouped_perm_slack)
+rows = [32, 32]                      # two flush groups of 4 shards each
+gperm = make_grouped_balanced_perm(jax.random.fold_in(key, 3), N, 8, rows)
+gslack = grouped_perm_slack(N, 8, rows)
+outg = shuffle_shard_map(xs, gperm, mesh=mesh, slack=gslack,
+                         check_capacity=True)
+np.testing.assert_allclose(np.asarray(outg),
+                           np.asarray(x)[np.asarray(gperm)], rtol=1e-6)
+print("grouped-perm OK")
+
+# uniform perm at the probe-sized slack: exact, capacity check on
+from repro.core.collector_dist import uniform_auto_slack
+uslack = uniform_auto_slack(N, 8)
+outu = shuffle_shard_map(xs, perm, mesh=mesh, slack=uslack,
+                         check_capacity=True)
+np.testing.assert_allclose(np.asarray(outu),
+                           np.asarray(x)[np.asarray(perm)], rtol=1e-6)
+print("auto-slack OK")
+
 # --- capacity regression: adversarial perm at slack=1.0 ----------------
+# (LAST: the deliberately-triggered in-graph callback errors surface
+# asynchronously and would poison later computations)
 # every output shard pulls ALL its rows from one source shard -> per-pair
 # load b=8 against capacity 2.
 adv = jnp.roll(jnp.arange(N), -8)
@@ -118,8 +143,111 @@ def test_shard_map_collector(_, tmp_path):
     for token in ("uniform-perm OK", "balanced-perm OK", "deshuffle OK",
                   "autodiff-deshuffle OK", "kernel-path OK", "mixing OK",
                   "capacity-host-guard OK", "capacity-silent-drop OK",
-                  "capacity-ingraph OK"):
+                  "capacity-ingraph OK", "grouped-perm OK",
+                  "auto-slack OK"):
         assert token in res.stdout, res.stdout
+
+
+def test_local_permute_order_in_range():
+    import jax
+    from repro.core.collector_dist import make_balanced_perm
+    for seed, s in [(0, 2), (1, 4), (2, 8), (3, 8)]:
+        n = s * s * 4
+        b = n // s
+        perms = [np.random.default_rng(seed).permutation(n),
+                 np.asarray(make_balanced_perm(jax.random.PRNGKey(seed),
+                                               n, s))]
+        for perm in perms:
+            inv = np.argsort(perm)
+            for sid in range(s):
+                out_pos = inv[np.arange(b) + sid * b]
+                order = np.argsort(out_pos // b)
+                assert order.min() >= 0
+                assert order.max() < b
+                assert np.array_equal(np.sort(order), np.arange(b))
+
+
+@settings(max_examples=10, deadline=None)
+@given(s_g=st.sampled_from([1, 2, 4]), groups=st.integers(2, 4),
+       m=st.integers(1, 3))
+def test_grouped_perm_never_mixes_flush_groups(s_g, groups, m):
+    """Sharded flush groups are sealed: every row of a grouped balanced
+    permutation stays inside its group's contiguous range, and within a
+    multi-shard group the exchange is exactly balanced."""
+    import jax
+    from repro.core.collector_dist import (
+        make_grouped_balanced_perm, pair_load)
+    b = s_g * m                       # per-shard slab, divisible by s_g
+    num_shards = s_g * groups
+    n = num_shards * b
+    rows = [s_g * b] * groups
+    perm = np.asarray(make_grouped_balanced_perm(
+        jax.random.PRNGKey(s_g * 100 + groups * 10 + m), n, num_shards,
+        rows))
+    assert sorted(perm.tolist()) == list(range(n))
+    start = 0
+    for size in rows:
+        seg = perm[start:start + size]
+        assert seg.min() >= start
+        assert seg.max() < start + size
+        start += size
+    load = pair_load(perm, num_shards)
+    for g in range(groups):
+        blk = load[g * s_g:(g + 1) * s_g, g * s_g:(g + 1) * s_g]
+        np.testing.assert_array_equal(blk, np.full((s_g, s_g), b // s_g))
+    assert load.sum() == n            # nothing routed across groups
+
+
+def test_grouped_perm_slack_covers_exact_loads():
+    """The auto-sized slack holds the deterministic bucket loads of grouped
+    balanced permutations, and resolves to the drop-free 1.0 for one
+    global flush."""
+    from repro.core.collector_dist import (
+        grouped_perm_slack, max_pair_load, make_grouped_balanced_perm,
+        pair_capacity)
+    import jax
+    assert grouped_perm_slack(64, 8, [64]) == 1.0
+    for rows in ([32, 32], [16, 16, 16, 16], [8] * 8):
+        slack = grouped_perm_slack(64, 8, rows)
+        perm = make_grouped_balanced_perm(jax.random.PRNGKey(0), 64, 8,
+                                          rows)
+        assert max_pair_load(perm, 8) <= pair_capacity(64, 8, slack)
+
+
+def test_grouped_perm_in_slab_groups():
+    """Flush groups smaller than a shard slab shuffle in place: sealed,
+    valid, diagonal loads covered by the auto slack."""
+    import jax
+    from repro.core.collector_dist import (
+        make_grouped_balanced_perm, grouped_perm_slack, pair_load,
+        pair_capacity)
+    rows = [8, 8, 8, 8]
+    perm = np.asarray(make_grouped_balanced_perm(
+        jax.random.PRNGKey(0), 32, 2, rows))
+    assert sorted(perm.tolist()) == list(range(32))
+    start = 0
+    for size in rows:
+        seg = perm[start:start + size]
+        assert seg.min() >= start
+        assert seg.max() < start + size
+        start += size
+    load = pair_load(perm, 2)
+    np.testing.assert_array_equal(load, np.diag([16, 16]))
+    assert load.max() <= pair_capacity(32, 2,
+                                       grouped_perm_slack(32, 2, rows))
+
+
+def test_uniform_auto_slack_covers_probe_loads():
+    from repro.core.collector_dist import (
+        uniform_auto_slack, pair_capacity, max_pair_load)
+    n, s = 64, 8
+    cap = pair_capacity(n, s, uniform_auto_slack(n, s))
+    rng = np.random.default_rng(0)
+    for _ in range(16):
+        assert max_pair_load(rng.permutation(n), s) < cap
+    # grouped probing respects flush boundaries and still fits
+    cap_g = pair_capacity(n, s, uniform_auto_slack(n, s, [32, 32]))
+    assert cap_g >= 2
 
 
 def test_pair_load_host_helpers():
