@@ -13,10 +13,20 @@ speedups here are not the point* — the benchmark pins down the sweep
 harness, verifies both engines agree at every size, and records the
 per-size loss deltas + timings that a TPU run would fill in. Each record
 also carries per-phase timings (perm build / all_to_all exchange / server
-update) so the CPU-harness overhead can be localized.
+update) so the CPU-harness overhead can be localized; a phase timer that
+never fired is a hard error, never a silent zero.
+
+Every config is swept in BOTH collector pipelines — ``sync`` (one
+blocking exchange per step) and ``double_buffered`` (per-flush-group
+exchanges overlapping the next group's client forward) — and each
+``double_buffered`` record carries ``overlap_savings``, the fraction of
+the sync epoch the streamed epoch saved (negative on this CPU harness
+means the pipeline's extra buffer traffic outweighed the overlap, the
+expected outcome without real async collectives).
 
 Run:  PYTHONPATH=src python benchmarks/collector_scale.py \
-          [--epochs 2] [--out BENCH_collector.json] [--use-kernel]
+          [--epochs 2] [--alpha 0.5] [--out BENCH_collector.json] \
+          [--use-kernel]
 Writes ``BENCH_collector.json`` (list of per-config records).
 """
 from __future__ import annotations
@@ -71,14 +81,35 @@ def time_epochs(step, key, st, epochs):
     return (time.time() - t0) / epochs, np.concatenate(losses)
 
 
-def _time_fn(fn, *args, reps=10):
-    out = fn(*args)                  # warmup/compile
-    jax.block_until_ready(out)
-    t0 = time.time()
-    for _ in range(reps):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.time() - t0) / reps
+class PhaseTimers:
+    """Registry of per-phase timings that refuses to emit a record with a
+    requested phase missing: a timer that never fired (or measured an
+    impossible non-positive duration) raises instead of silently writing
+    zeros into BENCH_collector.json."""
+
+    def __init__(self, required):
+        self.required = tuple(required)
+        self._t = {}
+
+    def time(self, name, fn, *args, reps=10):
+        out = fn(*args)              # warmup/compile
+        jax.block_until_ready(out)
+        t0 = time.perf_counter()     # monotonic: a wall-clock step back
+        for _ in range(reps):        # must not fail the >0 finalize check
+            out = fn(*args)
+        jax.block_until_ready(out)
+        self._t[name] = (time.perf_counter() - t0) / reps
+        return out
+
+    def finalize(self):
+        missing = [n for n in self.required
+                   if n not in self._t or not self._t[n] > 0.0]
+        if missing:
+            raise RuntimeError(
+                f"phase timer(s) {missing} never fired (or recorded a "
+                f"non-positive duration); refusing to write a record "
+                f"with silent zeros — got {self._t}")
+        return dict(self._t)
 
 
 def bench_phases(data_sh, split, opt, st_sh, mesh, num_clients, batch_size,
@@ -95,15 +126,15 @@ def bench_phases(data_sh, split, opt, st_sh, mesh, num_clients, batch_size,
     y_pool = jax.lax.dynamic_slice_in_dim(
         data_sh["y"], 0, batch_size, axis=1).reshape((n_pool,))
     key = jax.random.PRNGKey(2)
+    timers = PhaseTimers(("perm_build_s", "exchange_s",
+                          "server_update_s"))
 
     perm_fn = jax.jit(lambda k: make_balanced_perm(k, n_pool, SHARDS))
-    t_perm = _time_fn(perm_fn, key)
-    perm = perm_fn(key)
+    perm = timers.time("perm_build_s", perm_fn, key)
 
     exch_fn = jax.jit(lambda a, p: shuffle_shard_map(
         a, p, mesh=mesh, slack=1.0, use_kernel=use_kernel))
-    t_exch = _time_fn(exch_fn, a_pool, perm)
-    a_shuf = exch_fn(a_pool, perm)
+    a_shuf = timers.time("exchange_s", exch_fn, a_pool, perm)
     y_shuf = jax.jit(lambda y, p: shuffle_shard_map(
         y, p, mesh=mesh, slack=1.0))(y_pool, perm)
 
@@ -115,56 +146,74 @@ def bench_phases(data_sh, split, opt, st_sh, mesh, num_clients, batch_size,
         (loss, _), g_sp = jax.value_and_grad(srv_loss, has_aux=True)(sp)
         sp_new, sopt_new = opt.update(g_sp, sopt, sp, st_sh["step"])
         return loss, sp_new, sopt_new
-    t_srv = _time_fn(jax.jit(server_update), st_sh["sp"], st_sh["sopt"],
-                     a_shuf, y_shuf)
-    return {"perm_build_s": t_perm, "exchange_s": t_exch,
-            "server_update_s": t_srv}
+    timers.time("server_update_s", jax.jit(server_update), st_sh["sp"],
+                st_sh["sopt"], a_shuf, y_shuf)
+    return timers.finalize()
 
 
-def bench_config(num_clients, batch_size, *, epochs, use_kernel):
+def bench_config(num_clients, batch_size, *, epochs, use_kernel, alpha):
+    """Both pipeline records for one (clients, batch) config; the
+    single-device reference epoch and the per-phase timings run ONCE and
+    are shared, so the two records carry a consistent baseline."""
     cfg, data, split, opt, st0 = build(num_clients, batch_size)
     st0_host = jax.tree_util.tree_map(np.asarray, st0)
     key = jax.random.PRNGKey(1)
 
     single = jax.jit(lambda k, s: E.sfpl_epoch(
         k, s, data, split, opt, opt, num_clients=num_clients,
-        batch_size=batch_size))
+        batch_size=batch_size, alpha=alpha))
     t_single, l_single = time_epochs(single, key, st0, epochs)
 
     mesh = ED.make_data_mesh(SHARDS)
     data_sh = ED.shard_client_data(data, mesh)
-    sharded = ED.make_sfpl_epoch_sharded(
-        split, opt, opt, data_sh, mesh=mesh, num_clients=num_clients,
-        batch_size=batch_size, use_kernel=use_kernel)
-    st_sh = ED.shard_dcml_state(
-        jax.tree_util.tree_map(jnp.asarray, st0_host), mesh)
-    t_sharded, l_sharded = time_epochs(sharded, key, st_sh, epochs)
 
-    st_ph = ED.shard_dcml_state(
-        jax.tree_util.tree_map(jnp.asarray, st0_host), mesh)
-    phases = bench_phases(data_sh, split, opt, st_ph, mesh, num_clients,
-                          batch_size, use_kernel=use_kernel)
+    def fresh_sharded():
+        return ED.shard_dcml_state(
+            jax.tree_util.tree_map(jnp.asarray, st0_host), mesh)
 
-    rec = {
-        "num_clients": num_clients,
-        "batch_size": batch_size,
-        "pooled_batch": num_clients * batch_size,
-        "shards": SHARDS,
-        "use_kernel": use_kernel,
-        "epochs": epochs,
-        "sec_per_epoch_single": t_single,
-        "sec_per_epoch_sharded": t_sharded,
-        "speedup": t_single / t_sharded,
-        "max_loss_delta": float(np.abs(l_single - l_sharded).max()),
-        "phases": phases,
-    }
-    print(f"N={num_clients:3d} B={batch_size:3d} pooled={rec['pooled_batch']:4d}  "
-          f"single {t_single:.3f}s  sharded {t_sharded:.3f}s  "
-          f"dloss {rec['max_loss_delta']:.2e}  "
-          f"[perm {phases['perm_build_s']*1e3:.1f}ms | exch "
-          f"{phases['exchange_s']*1e3:.1f}ms | srv "
-          f"{phases['server_update_s']*1e3:.1f}ms]", flush=True)
-    return rec
+    phases = bench_phases(data_sh, split, opt, fresh_sharded(), mesh,
+                          num_clients, batch_size, use_kernel=use_kernel)
+
+    records = []
+    for pipeline in ("sync", "double_buffered"):
+        sharded = ED.make_sfpl_epoch_sharded(
+            split, opt, opt, data_sh, mesh=mesh, num_clients=num_clients,
+            batch_size=batch_size, use_kernel=use_kernel, alpha=alpha,
+            collector_pipeline=pipeline)
+        t_sharded, l_sharded = time_epochs(sharded, key, fresh_sharded(),
+                                           epochs)
+        rec = {
+            "num_clients": num_clients,
+            "batch_size": batch_size,
+            "pooled_batch": num_clients * batch_size,
+            "shards": SHARDS,
+            "use_kernel": use_kernel,
+            "alpha": alpha,
+            "pipeline": pipeline,
+            "epochs": epochs,
+            "sec_per_epoch_single": t_single,
+            "sec_per_epoch_sharded": t_sharded,
+            "speedup": t_single / t_sharded,
+            "max_loss_delta": float(np.abs(l_single - l_sharded).max()),
+            "phases": phases,
+        }
+        print(f"N={num_clients:3d} B={batch_size:3d} "
+              f"pooled={rec['pooled_batch']:4d} {pipeline:15s}  "
+              f"single {t_single:.3f}s  sharded {t_sharded:.3f}s  "
+              f"dloss {rec['max_loss_delta']:.2e}  "
+              f"[perm {phases['perm_build_s']*1e3:.1f}ms | exch "
+              f"{phases['exchange_s']*1e3:.1f}ms | srv "
+              f"{phases['server_update_s']*1e3:.1f}ms]", flush=True)
+        records.append(rec)
+
+    rec_sync, rec_db = records
+    # fraction of the sync sharded epoch the streamed epoch saved
+    rec_db["overlap_savings"] = (
+        1.0 - rec_db["sec_per_epoch_sharded"]
+        / rec_sync["sec_per_epoch_sharded"])
+    print(f"N={num_clients:3d} B={batch_size:3d} overlap_savings "
+          f"{rec_db['overlap_savings']*100:+.1f}%", flush=True)
+    return records
 
 
 def main():
@@ -172,6 +221,9 @@ def main():
     ap.add_argument("--epochs", type=int, default=2)
     ap.add_argument("--out", default="BENCH_collector.json")
     ap.add_argument("--use-kernel", action="store_true")
+    ap.add_argument("--alpha", type=float, default=0.5,
+                    help="flush threshold; < 1 gives the double_buffered "
+                         "pipeline multiple groups to overlap")
     ap.add_argument("--clients", type=int, nargs="*", default=[8, 16])
     ap.add_argument("--batches", type=int, nargs="*", default=[8, 16])
     args = ap.parse_args()
@@ -183,8 +235,20 @@ def main():
                 print(f"skip N={n} B={b}: not divisible for {SHARDS}-way "
                       f"balanced exchange", flush=True)
                 continue
-            records.append(bench_config(n, b, epochs=args.epochs,
-                                        use_kernel=args.use_kernel))
+            try:
+                # both pipelines must validate for the chosen alpha
+                # (double_buffered is the stricter layout) — skip like the
+                # launch drivers degrade, instead of crashing mid-sweep
+                # after the single-device leg
+                ED.check_sfpl_layout(n, b, SHARDS, alpha=args.alpha,
+                                     collector_pipeline="double_buffered")
+            except ValueError as e:
+                print(f"skip N={n} B={b} alpha={args.alpha}: {e}",
+                      flush=True)
+                continue
+            records.extend(bench_config(n, b, epochs=args.epochs,
+                                        use_kernel=args.use_kernel,
+                                        alpha=args.alpha))
     out = {
         "bench": "collector_scale",
         "devices": len(jax.devices()),

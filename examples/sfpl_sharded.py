@@ -8,8 +8,10 @@ construction) and the activation-gradient de-shuffle is the same exchange
 with the inverse permutation, supplied by autodiff. The run finishes by
 checking the loss trajectory against the single-device engine — including
 a partial-flush round (``alpha=0.5``: per-flush-group balanced exchanges
-aligned to shard boundaries) and the paper-faithful uniform collector
-mode with auto-sized slack.
+aligned to shard boundaries), the paper-faithful uniform collector mode
+with auto-sized slack, and the double-buffered streaming pipeline
+(per-group issue/complete exchanges overlapping the next group's client
+forward).
 
 Run:  PYTHONPATH=src python examples/sfpl_sharded.py
 """
@@ -77,8 +79,15 @@ def main():
     # partial collector flushes on the mesh: alpha=0.5 pools two 4-client
     # groups per flush; the grouped balanced exchange must track the
     # single-device flush-group shuffle
-    for mode_kw, label in (({"alpha": 0.5}, "alpha=0.5"),
-                           ({"collector_mode": "uniform"}, "uniform")):
+    for mode_kw, label in (
+            ({"alpha": 0.5}, "alpha=0.5"),
+            ({"collector_mode": "uniform"}, "uniform"),
+            # double-buffered streaming: each flush group's all_to_all is
+            # issued while the next group's client forward computes, and
+            # the final in-flight group is drained after the loop — the
+            # trajectory still tracks the single-device oracle
+            ({"alpha": 0.5, "collector_pipeline": "double_buffered"},
+             "alpha=0.5 streamed")):
         ep_m = ED.make_sfpl_epoch_sharded(
             split, opt, opt, data_sh, mesh=mesh, num_clients=V,
             batch_size=8, check_capacity=True, **mode_kw)

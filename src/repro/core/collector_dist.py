@@ -32,6 +32,30 @@ output) unless checked:
 For production the collector uses balanced block permutations
 (``make_balanced_perm``) that are drop-free at ``slack=1.0`` by
 construction (exactly B_local/n_shards rows per pair).
+
+Streaming (double-buffered) collector: the exchange is also exposed as
+two halves so a software pipeline can put client compute between them —
+``exchange_issue`` buckets a slab's rows by destination shard and hands
+them to ``all_to_all`` (the in-flight buffer slot), ``exchange_complete``
+places the received rows at their local output offsets. The composition
+is exactly ``shuffle_shard_map`` (same bucketing code), and the whole
+shuffle keeps the inverse-permutation custom VJP: the backward pass is
+one more issue/complete exchange with ``argsort(perm)``.
+
+Shape/layout contract (all entry points):
+
+  * ``x``: ``(N, ...)`` with dim 0 sharded into ``n_shards`` equal
+    ``b = N // n_shards``-row slabs over the mesh ``axis``;
+  * ``perm``: ``(N,)`` int, replicated; output row ``i`` is ``x[perm[i]]``;
+  * slack/capacity: each (src, dst) shard pair exchanges at most
+    ``pair_capacity(N, n_shards, slack)`` rows —
+
+    >>> pair_capacity(64, 8, 1.0)   # balanced: exactly b/S rows per pair
+    2
+    >>> grouped_perm_slack(64, 8, [64])   # one global balanced flush
+    1.0
+    >>> int(pair_load(np.arange(8), 4).max())   # identity perm: diagonal
+    2
 """
 from __future__ import annotations
 
@@ -100,6 +124,15 @@ def make_grouped_balanced_perm(key, n, num_shards, group_sizes):
     group contained in a single shard slab shuffles uniformly in place
     (no exchange). Requires every group to cover whole slabs or live
     inside one, and b divisible by S_g.
+
+    Contract: ``key`` a PRNG key, ``n`` the pooled row count, and the
+    returned ``(n,)`` permutation maps every row inside its own group —
+
+    >>> import jax
+    >>> p = make_grouped_balanced_perm(jax.random.PRNGKey(0), 16, 2,
+    ...                                [8, 8])
+    >>> bool((jnp.sort(p[:8]) == jnp.arange(8)).all())
+    True
     """
     if len(group_sizes) <= 1:
         return make_balanced_perm(key, n, num_shards)
@@ -244,8 +277,34 @@ def shuffle_shard_map(x, perm, *, mesh, axis="data", slack=2.0,
     return shuf(x, perm)
 
 
-def _shuffle_impl(x, perm, *, mesh, axis, slack, use_kernel,
-                  check_capacity):
+def _shard_map_maybe_norep(local, *, mesh, in_specs, out_specs, norep):
+    shard_map = get_shard_map()
+    kwargs = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+    if norep:
+        # pallas_call has no replication rule; the kernel only touches
+        # per-shard rows so skipping the check is sound. The flag was
+        # renamed check_rep -> check_vma across jax versions.
+        try:
+            return shard_map(local, **kwargs, check_rep=False)
+        except TypeError:
+            return shard_map(local, **kwargs, check_vma=False)
+    return shard_map(local, **kwargs)
+
+
+def exchange_issue(x, perm, *, mesh, axis="data", slack=2.0,
+                   use_kernel=False, check_capacity=False):
+    """First (issue) half of the split exchange: bucket this shard's rows
+    by destination shard and hand them to ``all_to_all``.
+
+    Returns the in-flight buffer slot — a ``(rows, pos, valid)`` triple
+    whose leading dims are sharded over ``axis``: per shard, ``rows`` is
+    the ``(n_shards, cap, ...)`` received bucket block, ``pos`` the global
+    output offset of each received row, ``valid`` its occupancy mask.
+    Nothing about the slot depends on later compute, so a scheduler is
+    free to overlap the collective with whatever runs between ``issue``
+    and ``complete`` — the hook the double-buffered streaming collector
+    pipelines client forwards into.
+    """
     n = x.shape[0]
     n_shards = mesh_axis_size(mesh, axis)
     b = n // n_shards
@@ -260,11 +319,10 @@ def _shuffle_impl(x, perm, *, mesh, axis, slack, use_kernel,
         return rows[idx]
 
     def local(x_loc, perm):
-        # this shard's rows of the OUTPUT: out[i] = x[perm[i]]
-        sid = jax.lax.axis_index(axis)
         # which of MY rows does each shard need?
         # shard s needs my row r if perm[s*b + j] == sid*b + r for some j.
         # build send buckets: for each destination shard, up to cap rows.
+        sid = jax.lax.axis_index(axis)
         inv = jnp.argsort(perm)                       # inv[g] = output pos
         my_rows_global = jnp.arange(b) + sid * b
         out_pos = inv[my_rows_global]                 # where my rows go
@@ -285,29 +343,48 @@ def _shuffle_impl(x, perm, *, mesh, axis, slack, use_kernel,
         send_pos = send_pos.at[slot_d, slot_r].set(out_pos[order])
         valid = jnp.zeros((n_shards, cap), bool).at[slot_d, slot_r].set(
             rank < cap)
-        # 3. exchange buckets
+        # exchange buckets: the in-flight half of the pipeline
         recv = jax.lax.all_to_all(send, axis, 0, 0, tiled=False)
         recv_pos = jax.lax.all_to_all(send_pos, axis, 0, 0, tiled=False)
         recv_valid = jax.lax.all_to_all(valid, axis, 0, 0, tiled=False)
-        # 4. place received rows at their local output offsets
-        flat = recv.reshape((n_shards * cap,) + x_loc.shape[1:])
+        return recv, recv_pos, recv_valid
+
+    issue = _shard_map_maybe_norep(
+        local, mesh=mesh, in_specs=(P(axis), P()),
+        out_specs=(P(axis), P(axis), P(axis)), norep=use_kernel)
+    return issue(x, perm)
+
+
+def exchange_complete(slot, n, *, mesh, axis="data"):
+    """Second (complete) half of the split exchange: place the received
+    rows of an ``exchange_issue`` buffer slot at their local output
+    offsets. ``n`` is the global row count of the shuffled array;
+    ``exchange_complete(exchange_issue(x, perm, ...), x.shape[0], ...)``
+    equals ``shuffle_shard_map(x, perm, ...)`` row for row."""
+    recv, recv_pos, recv_valid = slot
+    n_shards = mesh_axis_size(mesh, axis)
+    b = n // n_shards
+    cap = recv.shape[1]
+
+    def local(recv, recv_pos, recv_valid):
+        sid = jax.lax.axis_index(axis)
+        flat = recv.reshape((n_shards * cap,) + recv.shape[2:])
         fpos = recv_pos.reshape(-1) - sid * b
         fval = recv_valid.reshape(-1)
         fpos = jnp.where(fval, fpos, b)               # dropped -> OOB
-        out = jnp.zeros((b,) + x_loc.shape[1:], x_loc.dtype)
+        out = jnp.zeros((b,) + recv.shape[2:], recv.dtype)
         out = out.at[fpos].set(flat, mode="drop")
         return out
 
-    shard_map = get_shard_map()
-    kwargs = dict(mesh=mesh, in_specs=(P(axis), P()), out_specs=P(axis))
-    if use_kernel:
-        # pallas_call has no replication rule; the kernel only touches
-        # per-shard rows so skipping the check is sound. The flag was
-        # renamed check_rep -> check_vma across jax versions.
-        try:
-            shuf = shard_map(local, **kwargs, check_rep=False)
-        except TypeError:
-            shuf = shard_map(local, **kwargs, check_vma=False)
-    else:
-        shuf = shard_map(local, **kwargs)
-    return shuf(x, perm)
+    complete = _shard_map_maybe_norep(
+        local, mesh=mesh, in_specs=(P(axis), P(axis), P(axis)),
+        out_specs=P(axis), norep=False)
+    return complete(recv, recv_pos, recv_valid)
+
+
+def _shuffle_impl(x, perm, *, mesh, axis, slack, use_kernel,
+                  check_capacity):
+    slot = exchange_issue(x, perm, mesh=mesh, axis=axis, slack=slack,
+                          use_kernel=use_kernel,
+                          check_capacity=check_capacity)
+    return exchange_complete(slot, x.shape[0], mesh=mesh, axis=axis)

@@ -16,6 +16,11 @@ a ``DataMesh`` placement over a ``("data",)`` axis:
     group when ``alpha < 1``, aligned to shard boundaries) and "uniform"
     (paper-faithful uniform shuffle, slack auto-sized from probe
     ``max_pair_load`` with the in-graph capacity check forced on).
+    Collector pipelines: "sync" (one blocking exchange per step — the
+    parity oracle) and "double_buffered" (the paper's threshold-queue
+    collector streamed: per-flush-group issue/complete exchanges
+    overlapping the next group's client forward, final group drained
+    after the loop). See docs/ARCHITECTURE.md for the dataflow.
   * SFLv2: the deliberate sequential client visitation (the catastrophic-
     forgetting mechanism under study) is preserved; the per-client batch
     axis — and with it the server-side stream — is sharded instead.
@@ -60,7 +65,8 @@ def shard_client_data(data, mesh, *, axis="data"):
 
 
 def check_sfpl_layout(num_clients, batch_size, n_shards, *, alpha=1.0,
-                      collector_mode="balanced"):
+                      collector_mode="balanced",
+                      collector_pipeline="sync"):
     """Eager validation of the sharded SFPL layout; raises ValueError with
     an actionable message before any device work.
 
@@ -70,7 +76,17 @@ def check_sfpl_layout(num_clients, batch_size, n_shards, *, alpha=1.0,
     mid-group) or live entirely inside one slab (no exchange needed), and
     each multi-shard group's shard count must divide the slab so equal
     blocks can be exchanged. Uniform mode has no alignment requirement —
-    its slack is probed from the actual flush-group structure.
+    its slack is probed from the actual flush-group structure. The
+    ``double_buffered`` pipeline additionally needs every flush group's
+    row count divisible by the shard count (each group is row-sharded
+    over the whole mesh for its own issue/complete exchange).
+
+    Returns the flush-group row counts of the accepted layout:
+
+    >>> check_sfpl_layout(8, 8, 8)
+    [64]
+    >>> check_sfpl_layout(8, 8, 8, alpha=0.5)
+    [32, 32]
     """
     if num_clients % n_shards:
         raise ValueError(
@@ -80,6 +96,15 @@ def check_sfpl_layout(num_clients, batch_size, n_shards, *, alpha=1.0,
     b = n_pool // n_shards
     rows = [c * batch_size
             for c in C.flush_group_sizes(num_clients, alpha)]
+    if collector_pipeline == "double_buffered":
+        bad = [size for size in rows if size % n_shards]
+        if bad:
+            raise ValueError(
+                f"double_buffered collector needs every flush group's row "
+                f"count divisible by the {n_shards} shards (each group is "
+                f"row-sharded over the whole mesh for its own exchange); "
+                f"got group sizes {rows} (num_clients={num_clients}, "
+                f"batch_size={batch_size}, alpha={alpha})")
     if collector_mode != "balanced":
         return rows
     start = 0
@@ -105,7 +130,8 @@ def check_sfpl_layout(num_clients, batch_size, n_shards, *, alpha=1.0,
 
 
 def fit_shards(num_clients, batch_size, *, scheme="sfpl", alpha=1.0,
-               collector_mode="balanced", max_shards=None):
+               collector_mode="balanced", collector_pipeline="sync",
+               max_shards=None):
     """Largest shard count (up to the visible devices) the layout supports
     — shared by the launch drivers so every entrypoint degrades to a
     smaller mesh instead of crashing on indivisible configurations."""
@@ -117,7 +143,8 @@ def fit_shards(num_clients, batch_size, *, scheme="sfpl", alpha=1.0,
             continue
         try:
             check_sfpl_layout(num_clients, batch_size, s, alpha=alpha,
-                              collector_mode=collector_mode)
+                              collector_mode=collector_mode,
+                              collector_pipeline=collector_pipeline)
             return s
         except ValueError:
             continue
@@ -128,24 +155,42 @@ def sfpl_epoch_sharded(key, st, data, split: SplitModel, opt_c, opt_s, *,
                        mesh, num_clients, batch_size, bn_mode="cmsd",
                        alpha=1.0, use_kernel=False, slack=None,
                        check_capacity=False, axis="data",
-                       collector_mode="balanced"):
+                       collector_mode="balanced",
+                       collector_pipeline="sync", stream_slack=None):
     """Drop-in sharded replacement for ``engine.sfpl_epoch``.
+
+    Shape/layout contract: ``st`` is an ``init_dcml_state`` tree placed by
+    ``shard_dcml_state`` (client-stacked leaves sharded on their leading
+    client axis, server leaves replicated); ``data`` is the
+    ``{"x": (N, n, ...), "y": (N, n)}`` per-client set placed by
+    ``shard_client_data``; ``num_clients`` must divide over the mesh's
+    ``axis``. Returns ``(st, losses)`` with ``losses`` of shape
+    ``(n // batch_size,)``.
 
     ``alpha < 1`` runs per-flush-group balanced permutations aligned to
     shard boundaries; ``collector_mode="uniform"`` swaps in the paper-
     faithful uniform shuffle with auto-sized slack. ``slack=None``
     auto-sizes the exchange buffers (1.0 for one balanced global flush).
+    ``collector_pipeline="double_buffered"`` streams the collector: each
+    flush group's all_to_all is issued while the next group's client
+    forward computes (``RD.StreamingAllToAll``), with the final in-flight
+    group drained after the loop; ``"sync"`` (default) is the blocking
+    single-exchange parity oracle. ``stream_slack`` overrides the
+    streaming pipeline's per-group buffer sizing (default: capacity-safe
+    ``n_shards``).
     """
     n_shards = mesh_axis_size(mesh, axis)
     check_sfpl_layout(num_clients, batch_size, n_shards, alpha=alpha,
-                      collector_mode=collector_mode)
+                      collector_mode=collector_mode,
+                      collector_pipeline=collector_pipeline)
     placement = RD.DataMesh(mesh, axis)
     return RD.sfpl_round(
         key, st, data, split, opt_c, opt_s, num_clients=num_clients,
         batch_size=batch_size, bn_mode=bn_mode,
         collector=placement.collector(
             num_clients, alpha=alpha, mode=collector_mode, slack=slack,
-            use_kernel=use_kernel, check_capacity=check_capacity))
+            use_kernel=use_kernel, check_capacity=check_capacity,
+            pipeline=collector_pipeline, stream_slack=stream_slack))
 
 
 def make_sfpl_epoch_sharded(split: SplitModel, opt_c, opt_s, data, *,
@@ -167,7 +212,13 @@ def sflv2_epoch_sharded(key, st, data, split: SplitModel, opt_c, opt_s, *,
     client-visitation order is preserved bit-for-bit. State and data stay
     replicated (the visitation loop touches one client at a time); call it
     under jit (``make_sflv2_epoch_sharded``) so the batch sharding
-    constraints drive the partitioner."""
+    constraints drive the partitioner.
+
+    Shape/layout contract: ``st`` is an UNSHARDED ``init_dcml_state``
+    tree and ``data`` the unsharded ``{"x": (N, n, ...), "y": (N, n)}``
+    per-client set (contrast ``sfpl_epoch_sharded``); ``batch_size`` must
+    divide over the mesh's ``axis``. Returns ``(st, losses)`` with
+    ``losses`` of shape ``(N, n // batch_size)`` in visitation order."""
     n_shards = mesh_axis_size(mesh, axis)
     if batch_size % n_shards:
         raise ValueError(

@@ -8,15 +8,31 @@ This module is the single implementation both delegate to:
   * a ``Placement`` says WHERE state and batches live: ``SingleDevice``
     or a ``DataMesh`` over a ``("data",)`` axis;
   * a ``CollectorStrategy`` says HOW Algorithm 1's collect-shuffle-scatter
-    runs: ``DenseTake`` (one-device ``jnp.take``) or ``MeshAllToAll``
+    runs: ``DenseTake`` (one-device ``jnp.take``), ``MeshAllToAll``
     (explicit ``all_to_all`` with balanced, grouped-balanced, or uniform
-    permutations and auto-sized exchange slack).
+    permutations and auto-sized exchange slack), or ``StreamingAllToAll``
+    (the same exchange double-buffered per flush group: issue/complete
+    halves with the next group's client forward between them, drained
+    after the last group — the paper's threshold-queue collector as a
+    two-slot software pipeline).
 
-Gradient DE-shuffling is never coded: every strategy's ``permute`` is
-differentiable and the server loss is taken as a function of the
-PRE-shuffle pooled stack, so autodiff emits the inverse route (dense
-scatter or the inverse all_to_all) and hands each client exactly its own
-activation gradients.
+Gradient DE-shuffling is never hand-derived: ``DenseTake`` and
+``MeshAllToAll`` expose a differentiable ``permute`` and the server loss
+is taken as a function of the PRE-shuffle pooled stack, so autodiff emits
+the inverse route (dense scatter or the inverse all_to_all) and hands
+each client exactly its own activation gradients. ``StreamingAllToAll``
+assembles the shuffled pool outside the loss (the forwards must
+interleave with the exchanges), so it routes explicitly —
+``route_back`` is the identical inverse-permutation exchange.
+
+Shape contract shared by every strategy: the pool is client-major,
+``(num_clients * batch_size, ...)`` with row ``c * batch_size + j`` being
+sample ``j`` of client ``c``; ``make_perm`` returns a replicated ``(n,)``
+permutation that never crosses flush-group boundaries —
+
+>>> from repro.core.collector import flush_group_sizes
+>>> flush_group_sizes(8, 0.25)     # alpha=0.25: four 2-client flushes
+[2, 2, 2, 2]
 
 Flush groups (the paper's ``alpha`` accumulation threshold) work on every
 placement: ``DenseTake`` shuffles within contiguous client groups, and
@@ -42,8 +58,9 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.core import collector as C
 from repro.core.bn_policy import fedavg, aggregate_bn_state
 from repro.core.collector_dist import (
-    grouped_perm_slack, make_grouped_balanced_perm, mesh_axis_size,
-    shuffle_shard_map, uniform_auto_slack)
+    exchange_complete, exchange_issue, grouped_perm_slack,
+    make_grouped_balanced_perm, mesh_axis_size, shuffle_shard_map,
+    uniform_auto_slack)
 
 
 # --------------------------------------------------------------------------
@@ -114,11 +131,18 @@ class DataMesh:
         return jax.tree_util.tree_map(c, tree)
 
     def collector(self, num_clients, *, alpha=1.0, mode="balanced",
-                  slack=None, use_kernel=False, check_capacity=False):
-        return MeshAllToAll(mesh=self.mesh, num_clients=num_clients,
-                            axis=self.axis, mode=mode, alpha=alpha,
-                            slack=slack, use_kernel=use_kernel,
-                            check_capacity=check_capacity)
+                  slack=None, use_kernel=False, check_capacity=False,
+                  pipeline="sync", stream_slack=None):
+        if pipeline not in ("sync", "double_buffered"):
+            raise ValueError(f"unknown collector pipeline {pipeline!r}: "
+                             f"expected 'sync' or 'double_buffered'")
+        common = dict(mesh=self.mesh, num_clients=num_clients,
+                      axis=self.axis, mode=mode, alpha=alpha,
+                      slack=slack, use_kernel=use_kernel,
+                      check_capacity=check_capacity)
+        if pipeline == "double_buffered":
+            return StreamingAllToAll(stream_slack=stream_slack, **common)
+        return MeshAllToAll(**common)
 
 
 # --------------------------------------------------------------------------
@@ -162,6 +186,8 @@ class MeshAllToAll:
     use_kernel: bool = False
     check_capacity: bool = False
 
+    pipelined = False
+
     def group_rows(self, n):
         per_client = n // self.num_clients
         return [c * per_client
@@ -192,6 +218,137 @@ class MeshAllToAll:
             x, perm, mesh=self.mesh, axis=self.axis,
             slack=self.resolved_slack(x.shape[0]),
             use_kernel=use_k, check_capacity=check)
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamingAllToAll(MeshAllToAll):
+    """The paper's threshold-queue collector as a two-slot software
+    pipeline: each flush group is exchanged with its OWN all_to_all, split
+    into issue/complete halves, so the exchange of group ``k`` is in
+    flight while the client forward of group ``k+1`` computes.
+
+    Semantics are identical to ``MeshAllToAll`` with the same ``mode`` /
+    ``alpha`` — the per-group exchange moves exactly the rows the one big
+    grouped exchange would (the grouped permutation never crosses flush
+    groups), so the shuffled pool, and with it the loss trajectory, is
+    bit-comparable to the synchronous path. What changes is the dataflow:
+    ``sfpl_round`` produces the pool group by group and ``streamed_shuffle``
+    keeps one filled buffer slot in flight, draining the last one after
+    the loop.
+
+    Because the shuffled pool is assembled OUTSIDE the server loss (the
+    forwards must interleave with the exchanges), gradient routing is
+    explicit here: ``route_back`` runs the same per-group exchange with
+    the inverse permutation — exactly what autodiff emits for the
+    synchronous strategy's in-loss ``permute``.
+
+    ``stream_slack`` sizes the per-group exchange buffers; the default
+    ``None`` uses ``n_shards`` (capacity ``b_g + 1`` per pair), which
+    admits ANY group permutation drop-free at the price of wider buffers —
+    streaming trades exchange bandwidth for overlap.
+
+    Layout contract: every flush group's row count must divide by the
+    shard count (each group is row-sharded over the whole mesh for its
+    exchange); ``engine_dist.check_sfpl_layout(...,
+    collector_pipeline="double_buffered")`` validates this eagerly.
+    """
+    stream_slack: Optional[float] = None
+
+    pipelined = True
+
+    def group_bounds(self, n):
+        """Static (start, stop) row ranges of the flush groups in the
+        client-major pool."""
+        bounds, start = [], 0
+        for size in self.group_rows(n):
+            bounds.append((start, start + size))
+            start += size
+        return bounds
+
+    def client_groups(self):
+        """Static (first, last+1) client ranges of the flush groups."""
+        out, c0 = [], 0
+        for c in C.flush_group_sizes(self.num_clients, self.alpha):
+            out.append((c0, c0 + c))
+            c0 += c
+        return out
+
+    def _sub_slack(self):
+        if self.stream_slack is not None:
+            return self.stream_slack
+        # capacity-safe default: cap = b_g + 1 holds every row of a source
+        # slab, so any permutation of the group is drop-free
+        return float(mesh_axis_size(self.mesh, self.axis))
+
+    def _sub_perm(self, perm, bounds):
+        r0, r1 = bounds
+        return jax.lax.slice_in_dim(perm, r0, r1, axis=0) - r0
+
+    def issue(self, rows, perm, bounds):
+        """Launch flush group ``bounds``'s exchange; returns the in-flight
+        buffer slot (``collector_dist.exchange_issue``)."""
+        use_k = self.use_kernel and jnp.issubdtype(rows.dtype,
+                                                   jnp.floating)
+        return exchange_issue(
+            rows, self._sub_perm(perm, bounds), mesh=self.mesh,
+            axis=self.axis, slack=self._sub_slack(),
+            use_kernel=use_k, check_capacity=self.check_capacity)
+
+    def complete(self, slot, bounds):
+        """Land an in-flight buffer slot: the group's shuffled rows."""
+        r0, r1 = bounds
+        return exchange_complete(slot, r1 - r0, mesh=self.mesh,
+                                 axis=self.axis)
+
+    def route_back(self, g_shuf, perm, n):
+        """Algorithm 1's de-shuffle, explicit: the per-group exchange with
+        the inverse permutation hands each client its own activation
+        gradients — move-for-move what autodiff emits for the synchronous
+        path, so trajectories stay bit-comparable."""
+        parts = []
+        for bounds in self.group_bounds(n):
+            r0, r1 = bounds
+            sub = self._sub_perm(perm, bounds)
+            parts.append(shuffle_shard_map(
+                jax.lax.slice_in_dim(g_shuf, r0, r1, axis=0),
+                jnp.argsort(sub), mesh=self.mesh, axis=self.axis,
+                slack=self._sub_slack()))
+        return _concat_parts(parts)
+
+
+def _concat_parts(parts):
+    return parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=0)
+
+
+def streamed_shuffle(collector, perm, n, produce_group):
+    """Two-slot software pipeline over flush groups.
+
+    ``produce_group(g)`` returns flush group ``g``'s pooled rows (the
+    client forward of that group, in ``sfpl_round``). The filled slot's
+    exchange is ISSUED before the next group's rows are produced and
+    COMPLETED after — issue(k) and produce(k+1) share no data dependence,
+    so the all_to_all overlaps the next group's compute under a
+    latency-hiding schedule. The final in-flight slot is DRAINED after
+    the loop (the epilogue tests/test_streaming.py property-checks:
+    the last flush group is never dropped).
+
+    Returns the shuffled pool — row for row equal to
+    ``collector.permute(pool, perm)`` on the synchronous strategy.
+    """
+    bounds = collector.group_bounds(n)
+    parts, slot = [], None
+    for g in range(len(bounds)):
+        ticket = None
+        if slot is not None:
+            ticket = collector.issue(slot, perm, bounds[g - 1])
+        rows = produce_group(g)
+        if ticket is not None:
+            parts.append(collector.complete(ticket, bounds[g - 1]))
+        slot = rows
+    # drain epilogue: the last filled buffer is still in flight
+    parts.append(collector.complete(
+        collector.issue(slot, perm, bounds[-1]), bounds[-1]))
+    return _concat_parts(parts)
 
 
 # --------------------------------------------------------------------------
@@ -233,6 +390,8 @@ def sfpl_round(key, st, data, split, opt_c, opt_s, *, num_clients,
     steps = n_local // batch_size
     n_pool = num_clients * batch_size
     client_upd = make_client_update(split, opt_c)
+    streamed = getattr(collector, "pipelined", False)
+    cgroups = collector.client_groups() if streamed else None
 
     def one_step(carry, idx):
         st, key = carry
@@ -241,30 +400,62 @@ def sfpl_round(key, st, data, split, opt_c, opt_s, *, num_clients,
                                           batch_size, axis=1)
         yb = jax.lax.dynamic_slice_in_dim(data["y"], idx * batch_size,
                                           batch_size, axis=1)
-
-        # 1. client forward, parallel over the (possibly sharded) client axis
-        A, ncbn = jax.vmap(
-            lambda cp, cs, x: split.client_fwd(cp, cs, x, True, None)
-        )(st["cp"], st["cbn"], xb)
-
-        # 2. global collector: pool client-major (rows inherit the client
-        # sharding, if any) and shuffle per the strategy
-        a_pool = A.reshape((n_pool,) + A.shape[2:])
         y_pool = yb.reshape((n_pool,))
         perm = collector.make_perm(kperm, n_pool)
         y_shuf = collector.permute(y_pool, perm)
+        fwd = lambda cp, cs, x: split.client_fwd(cp, cs, x, True, None)
 
-        # 3. ONE server update on the shuffled stack. Differentiating w.r.t.
-        # the PRE-shuffle pool makes autodiff emit the de-shuffle (dense
-        # scatter or inverse all_to_all): g_pool arrives already routed
-        # back to source clients.
-        def srv_loss(sp, a_pool):
-            a_shuf = collector.permute(a_pool, perm)
+        def srv_loss_on(sp, a_shuf):
             loss, (nss, _) = split.server_loss(sp, st["sbn"], a_shuf,
                                                y_shuf, True, None)
             return loss, nss
-        (loss, nsbn), (g_sp, g_pool) = jax.value_and_grad(
-            srv_loss, argnums=(0, 1), has_aux=True)(st["sp"], a_pool)
+
+        if streamed:
+            # 1+2+3 pipelined: the client forward runs flush group by
+            # flush group, and each filled group's all_to_all is in
+            # flight while the next group computes (two-slot pipeline,
+            # drained after the last group). The shuffled pool is
+            # assembled outside the loss, so the de-shuffle is the
+            # strategy's explicit inverse-perm exchange (route_back) —
+            # move-for-move what autodiff emits on the sync path.
+            A_parts, bn_parts = [], []
+
+            def produce_group(g):
+                c0, c1 = cgroups[g]
+                sl = lambda t: jax.tree_util.tree_map(
+                    lambda a: a[c0:c1], t)
+                A_g, ncbn_g = jax.vmap(fwd)(sl(st["cp"]), sl(st["cbn"]),
+                                            xb[c0:c1])
+                A_parts.append(A_g)
+                bn_parts.append(ncbn_g)
+                return A_g.reshape((-1,) + A_g.shape[2:])
+
+            a_shuf = streamed_shuffle(collector, perm, n_pool,
+                                      produce_group)
+            A = _concat_parts(A_parts)
+            ncbn = jax.tree_util.tree_map(
+                lambda *xs: _concat_parts(list(xs)), *bn_parts)
+            (loss, nsbn), (g_sp, g_shuf) = jax.value_and_grad(
+                srv_loss_on, argnums=(0, 1), has_aux=True)(
+                st["sp"], a_shuf)
+            g_pool = collector.route_back(g_shuf, perm, n_pool)
+        else:
+            # 1. client forward, parallel over the (possibly sharded)
+            # client axis
+            A, ncbn = jax.vmap(fwd)(st["cp"], st["cbn"], xb)
+
+            # 2. global collector: pool client-major (rows inherit the
+            # client sharding, if any) and shuffle per the strategy
+            a_pool = A.reshape((n_pool,) + A.shape[2:])
+
+            # 3. ONE server update on the shuffled stack. Differentiating
+            # w.r.t. the PRE-shuffle pool makes autodiff emit the
+            # de-shuffle (dense scatter or inverse all_to_all): g_pool
+            # arrives already routed back to source clients.
+            def srv_loss(sp, a_pool):
+                return srv_loss_on(sp, collector.permute(a_pool, perm))
+            (loss, nsbn), (g_sp, g_pool) = jax.value_and_grad(
+                srv_loss, argnums=(0, 1), has_aux=True)(st["sp"], a_pool)
         sp_new, sopt_new = opt_s.update(g_sp, st["sopt"], st["sp"],
                                         st["step"])
 

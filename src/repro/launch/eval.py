@@ -10,7 +10,8 @@ evaluation (arXiv:2003.13376) argues is the only meaningful one.
 Usage:
   PYTHONPATH=src python -m repro.launch.eval --arch qwen3-8b --batches 8
   PYTHONPATH=src python -m repro.launch.eval --paper [--sharded] \
-      [--clients 8] [--epochs 4] [--alpha 1.0]
+      [--clients 8] [--epochs 4] [--alpha 1.0] \
+      [--pipeline double_buffered]
 """
 from __future__ import annotations
 
@@ -60,7 +61,8 @@ def evaluate_lm(spec, cfg, params, *, batches=8, batch=8, seq=64, seed=0):
 
 
 def evaluate_paper(*, num_clients=8, epochs=4, batch_size=8, sharded=False,
-                   alpha=1.0, depth=8, width=8, hw=8, lr=0.05, seed=0):
+                   alpha=1.0, pipeline="sync", depth=8, width=8, hw=8,
+                   lr=0.05, seed=0):
     """Train SFPL and SFLv2 through the unified round engine on the same
     data, fleet size, and placement; return accuracy under BOTH test
     protocols (IID and non-IID batches) per scheme, so the head-to-head
@@ -89,14 +91,16 @@ def evaluate_paper(*, num_clients=8, epochs=4, batch_size=8, sharded=False,
         if sharded:
             from repro.core import engine_dist as ED
             shards = ED.fit_shards(num_clients, batch_size, scheme=scheme,
-                                   alpha=alpha)
+                                   alpha=alpha,
+                                   collector_pipeline=pipeline)
             mesh = ED.make_data_mesh(shards)
             if scheme == "sfpl":
                 st = ED.shard_dcml_state(st, mesh)
                 epoch = ED.make_sfpl_epoch_sharded(
                     split, opt, opt, ED.shard_client_data(data, mesh),
                     mesh=mesh, num_clients=num_clients,
-                    batch_size=batch_size, alpha=alpha)
+                    batch_size=batch_size, alpha=alpha,
+                    collector_pipeline=pipeline)
             else:
                 epoch = ED.make_sflv2_epoch_sharded(
                     split, opt, opt, data, mesh=mesh,
@@ -138,10 +142,15 @@ def main():
     ap.add_argument("--clients", type=int, default=8)
     ap.add_argument("--epochs", type=int, default=4)
     ap.add_argument("--alpha", type=float, default=1.0)
+    ap.add_argument("--pipeline", default="sync",
+                    choices=("sync", "double_buffered"),
+                    help="sharded SFPL collector pipeline (with --paper "
+                         "--sharded)")
     args = ap.parse_args()
     if args.paper:
         rep = evaluate_paper(num_clients=args.clients, epochs=args.epochs,
-                             sharded=args.sharded, alpha=args.alpha)
+                             sharded=args.sharded, alpha=args.alpha,
+                             pipeline=args.pipeline)
         chance = 100.0 / args.clients
         print(f"matched fleet ({args.clients} clients, "
               f"sharded={args.sharded}, chance {chance:.1f}%):")

@@ -12,8 +12,10 @@ Two modes:
     smashed batch sharded, collector as an explicit all_to_all in
     ``--collector {balanced,uniform}`` mode with flush threshold
     ``--alpha``; SFLv2: the server stream sharded over the batch axis).
-    ``--use-kernel`` routes the local permute through the Pallas collector
-    kernel. To simulate a mesh on CPU, set
+    ``--pipeline double_buffered`` streams the collector: each flush
+    group's exchange overlaps the next group's client forward (see
+    docs/collector_modes.md). ``--use-kernel`` routes the local permute
+    through the Pallas collector kernel. To simulate a mesh on CPU, set
     XLA_FLAGS=--xla_force_host_platform_device_count=8 before launching.
 
 Usage:
@@ -21,7 +23,7 @@ Usage:
       --steps 50 [--sfpl] [--ckpt out.npz]
   PYTHONPATH=src python -m repro.launch.train --paper --sharded \
       --clients 8 --epochs 4 [--scheme sflv2] [--alpha 0.5] \
-      [--collector uniform] [--use-kernel]
+      [--collector uniform] [--pipeline double_buffered] [--use-kernel]
 """
 from __future__ import annotations
 
@@ -83,7 +85,7 @@ def train_lm(arch_id, *, steps=50, batch=8, seq=64, smoke=True, sfpl=False,
 def train_paper(*, num_clients=8, epochs=4, batch_size=8, sharded=False,
                 use_kernel=False, depth=8, width=8, hw=8, lr=0.05,
                 scheme="sfpl", alpha=1.0, collector="balanced",
-                log_every=1):
+                pipeline="sync", log_every=1):
     """DCML rounds on synthetic CIFAR, one client per class (only positive
     labels). ``scheme`` picks SFPL (Algorithm 1 + 2) or the SFLv2 baseline;
     ``sharded`` runs the same round body on a mesh over all visible devices
@@ -120,18 +122,19 @@ def train_paper(*, num_clients=8, epochs=4, batch_size=8, sharded=False,
                 batch_size=batch_size)
         else:
             shards = ED.fit_shards(num_clients, batch_size, alpha=alpha,
-                                   collector_mode=collector)
+                                   collector_mode=collector,
+                                   collector_pipeline=pipeline)
             mesh = ED.make_data_mesh(shards)
             print(f"sharded SFPL: {shards}-way data mesh over {n_dev} "
                   f"device(s), collector={collector}, alpha={alpha}, "
-                  f"use_kernel={use_kernel}")
+                  f"pipeline={pipeline}, use_kernel={use_kernel}")
             data_dev = ED.shard_client_data(data, mesh)
             st = ED.shard_dcml_state(st, mesh)
             epoch = ED.make_sfpl_epoch_sharded(
                 split, opt, opt, data_dev, mesh=mesh,
                 num_clients=num_clients, batch_size=batch_size,
                 use_kernel=use_kernel, alpha=alpha,
-                collector_mode=collector)
+                collector_mode=collector, collector_pipeline=pipeline)
     elif scheme == "sflv2":
         epoch = jax.jit(lambda k, s: E.sflv2_epoch(
             k, s, data, split, opt, opt, num_clients=num_clients,
@@ -185,6 +188,12 @@ def main():
     ap.add_argument("--collector", default="balanced",
                     choices=("balanced", "uniform"),
                     help="sharded SFPL collector permutation mode")
+    ap.add_argument("--pipeline", default="sync",
+                    choices=("sync", "double_buffered"),
+                    help="sharded SFPL collector pipeline: sync (one "
+                         "blocking exchange) or double_buffered (per-"
+                         "flush-group exchange overlapping the next "
+                         "group's client forward)")
     ap.add_argument("--clients", type=int, default=8)
     ap.add_argument("--epochs", type=int, default=4)
     args = ap.parse_args()
@@ -194,6 +203,7 @@ def main():
                              use_kernel=args.use_kernel,
                              scheme=args.scheme, alpha=args.alpha,
                              collector=args.collector,
+                             pipeline=args.pipeline,
                              lr=args.lr if args.lr is not None else 0.05)
     else:
         losses = train_lm(args.arch, steps=args.steps, batch=args.batch,

@@ -1,0 +1,77 @@
+#!/usr/bin/env python
+"""Offline markdown link checker for the docs tree.
+
+Validates every ``[text](target)`` in the given markdown files:
+
+  * relative file targets must exist (checked against the *linking*
+    file's directory; ``#fragment`` suffixes are checked against the
+    target file's headings, GitHub anchor style);
+  * bare ``#fragment`` targets must match a heading in the same file;
+  * ``http(s)://`` / ``mailto:`` targets are accepted on syntax alone —
+    CI runs offline, so external reachability is out of scope.
+
+Usage: python tools/check_links.py README.md docs/*.md
+Exits 1 listing every broken link.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+LINK_RE = re.compile(r"(?<!!)\[[^\]]+\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+CODE_FENCE_RE = re.compile(r"```.*?```", re.DOTALL)
+
+
+def github_anchor(heading):
+    """GitHub's heading -> anchor slug (lowercase, spaces to dashes,
+    punctuation dropped)."""
+    slug = heading.strip().lower()
+    slug = re.sub(r"[`*_]", "", slug)
+    slug = re.sub(r"[^\w\- ]", "", slug)
+    return re.sub(r" +", "-", slug)
+
+
+def anchors_of(path):
+    text = path.read_text(encoding="utf-8")
+    text = CODE_FENCE_RE.sub("", text)
+    return {github_anchor(h) for h in HEADING_RE.findall(text)}
+
+
+def check_file(md, errors):
+    text = md.read_text(encoding="utf-8")
+    text = CODE_FENCE_RE.sub("", text)
+    for target in LINK_RE.findall(text):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        path_part, _, frag = target.partition("#")
+        dest = md if not path_part else (md.parent / path_part).resolve()
+        if path_part and not dest.exists():
+            errors.append(f"{md}: broken link -> {target} "
+                          f"(no such file {dest})")
+            continue
+        if frag and dest.suffix == ".md":
+            if github_anchor(frag) not in anchors_of(dest):
+                errors.append(f"{md}: broken anchor -> {target} "
+                              f"(no heading #{frag} in {dest.name})")
+
+
+def main(argv):
+    files = [Path(a) for a in argv] or [Path("README.md")]
+    missing = [f for f in files if not f.exists()]
+    if missing:
+        print(f"no such file(s): {missing}", file=sys.stderr)
+        return 1
+    errors = []
+    for md in files:
+        check_file(md, errors)
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"checked {len(files)} file(s): "
+          f"{'FAIL' if errors else 'all links OK'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
