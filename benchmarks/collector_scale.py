@@ -12,17 +12,21 @@ Forced host devices stand in for a real accelerator mesh, so *wall-clock
 speedups here are not the point* — the benchmark pins down the sweep
 harness, verifies both engines agree at every size, and records the
 per-size loss deltas + timings that a TPU run would fill in. Each record
-also carries per-phase timings (perm build / all_to_all exchange / server
-update) so the CPU-harness overhead can be localized; a phase timer that
-never fired is a hard error, never a silent zero.
+also carries per-phase timings (perm build / route-plan build / plan
+exchange / server update) so the CPU-harness overhead can be localized;
+a phase timer that never fired is a hard error, never a silent zero.
 
 Every config is swept in BOTH collector pipelines — ``sync`` (one
 blocking exchange per step) and ``double_buffered`` (per-flush-group
-exchanges overlapping the next group's client forward) — and each
-``double_buffered`` record carries ``overlap_savings``, the fraction of
-the sync epoch the streamed epoch saved (negative on this CPU harness
-means the pipeline's extra buffer traffic outweighed the overlap, the
-expected outcome without real async collectives).
+exchanges overlapping the next group's client forward) — and the phases
+are timed PER PIPELINE with that pipeline's own exchange machinery
+(sync: one dense plan exchange over the pool; double_buffered: the
+per-group issue/complete exchanges back to back), so the two records of
+a config never share a phases dict. Each ``double_buffered`` record
+carries ``overlap_savings``, the fraction of the sync epoch the streamed
+epoch saved (negative on this CPU harness means the pipeline's extra
+buffer traffic outweighed the overlap, the expected outcome without real
+async collectives).
 
 Run:  PYTHONPATH=src python benchmarks/collector_scale.py \
           [--epochs 2] [--alpha 0.5] [--out BENCH_collector.json] \
@@ -45,7 +49,7 @@ import numpy as np
 
 from repro.core import engine as E
 from repro.core import engine_dist as ED
-from repro.core.collector_dist import make_balanced_perm, shuffle_shard_map
+from repro.core import round as RD
 from repro.data import make_synthetic_cifar, partition_positive_labels
 from repro.models import resnet as R
 from repro.optim import sgd_momentum
@@ -91,14 +95,21 @@ class PhaseTimers:
         self.required = tuple(required)
         self._t = {}
 
-    def time(self, name, fn, *args, reps=10):
+    def time(self, name, fn, *args, reps=40, batches=5):
+        """Record the MINIMUM per-call time over ``batches`` timed groups
+        of ``reps`` calls — the standard microbenchmark estimator for the
+        sub-millisecond phases, where a single scheduler stall in a mean
+        would swamp the quantity being measured."""
         out = fn(*args)              # warmup/compile
         jax.block_until_ready(out)
-        t0 = time.perf_counter()     # monotonic: a wall-clock step back
-        for _ in range(reps):        # must not fail the >0 finalize check
-            out = fn(*args)
-        jax.block_until_ready(out)
-        self._t[name] = (time.perf_counter() - t0) / reps
+        best = float("inf")
+        for _ in range(batches):
+            t0 = time.perf_counter()   # monotonic: a wall-clock step back
+            for _ in range(reps):      # must not fail >0 finalize check
+                out = fn(*args)
+            jax.block_until_ready(out)
+            best = min(best, (time.perf_counter() - t0) / reps)
+        self._t[name] = best
         return out
 
     def finalize(self):
@@ -113,10 +124,18 @@ class PhaseTimers:
 
 
 def bench_phases(data_sh, split, opt, st_sh, mesh, num_clients, batch_size,
-                 *, use_kernel):
-    """Per-phase timings of the sharded SFPL step — perm build, all_to_all
-    exchange, server update — to localize where the wall-clock goes (the
-    CPU-harness overhead recorded in BENCH_collector.json)."""
+                 *, use_kernel, alpha, pipeline):
+    """Per-phase timings of the sharded SFPL step — perm build, route-plan
+    build, plan exchange, server update — to localize where the
+    wall-clock goes (the CPU-harness overhead recorded in
+    BENCH_collector.json). Timed PER PIPELINE with that pipeline's own
+    collector strategy: ``sync`` exchanges the whole pool with one dense
+    plan exchange, ``double_buffered`` with its capacity-safe
+    issue/complete halves (no client compute interleaved — the exchange
+    cost alone). The microbench pins ONE GLOBAL FLUSH so the exchange
+    numbers stay comparable across bench alphas and releases; the
+    ``alpha`` flush structure shows up in the epoch timings."""
+    del alpha  # phases microbench: one global flush (see docstring)
     n_pool = num_clients * batch_size
     xb = jax.lax.dynamic_slice_in_dim(data_sh["x"], 0, batch_size, axis=1)
     A, _ = jax.jit(jax.vmap(
@@ -126,17 +145,25 @@ def bench_phases(data_sh, split, opt, st_sh, mesh, num_clients, batch_size,
     y_pool = jax.lax.dynamic_slice_in_dim(
         data_sh["y"], 0, batch_size, axis=1).reshape((n_pool,))
     key = jax.random.PRNGKey(2)
-    timers = PhaseTimers(("perm_build_s", "exchange_s",
+    timers = PhaseTimers(("perm_build_s", "plan_build_s", "exchange_s",
                           "server_update_s"))
 
-    perm_fn = jax.jit(lambda k: make_balanced_perm(k, n_pool, SHARDS))
+    coll = RD.DataMesh(mesh).collector(
+        num_clients, alpha=1.0, use_kernel=use_kernel, pipeline=pipeline)
+    perm_fn = jax.jit(lambda k: coll.make_perm(k, n_pool))
     perm = timers.time("perm_build_s", perm_fn, key)
 
-    exch_fn = jax.jit(lambda a, p: shuffle_shard_map(
-        a, p, mesh=mesh, slack=1.0, use_kernel=use_kernel))
-    a_shuf = timers.time("exchange_s", exch_fn, a_pool, perm)
-    y_shuf = jax.jit(lambda y, p: shuffle_shard_map(
-        y, p, mesh=mesh, slack=1.0))(y_pool, perm)
+    prep_fn = jax.jit(lambda p: coll.prepare(p, n_pool))
+    prep = timers.time("plan_build_s", prep_fn, perm)
+
+    if pipeline == "double_buffered":
+        def exchange(a, prep):
+            return RD.streamed_shuffle(coll, prep, n_pool, lambda g: a)
+    else:
+        def exchange(a, prep):
+            return coll.permute(a, prep)
+    a_shuf = timers.time("exchange_s", jax.jit(exchange), a_pool, prep)
+    y_shuf = jax.jit(exchange)(y_pool, prep)
 
     def server_update(sp, sopt, a, y):
         def srv_loss(sp_):
@@ -147,14 +174,16 @@ def bench_phases(data_sh, split, opt, st_sh, mesh, num_clients, batch_size,
         sp_new, sopt_new = opt.update(g_sp, sopt, sp, st_sh["step"])
         return loss, sp_new, sopt_new
     timers.time("server_update_s", jax.jit(server_update), st_sh["sp"],
-                st_sh["sopt"], a_shuf, y_shuf)
+                st_sh["sopt"], a_shuf, y_shuf, reps=4)
     return timers.finalize()
 
 
 def bench_config(num_clients, batch_size, *, epochs, use_kernel, alpha):
     """Both pipeline records for one (clients, batch) config; the
-    single-device reference epoch and the per-phase timings run ONCE and
-    are shared, so the two records carry a consistent baseline."""
+    single-device reference epoch runs ONCE and is shared, so the two
+    records carry a consistent baseline — but each pipeline's phases are
+    timed with ITS OWN exchange machinery (a shared dict once hid a
+    byte-identical-phases bug in BENCH_collector.json)."""
     cfg, data, split, opt, st0 = build(num_clients, batch_size)
     st0_host = jax.tree_util.tree_map(np.asarray, st0)
     key = jax.random.PRNGKey(1)
@@ -171,11 +200,12 @@ def bench_config(num_clients, batch_size, *, epochs, use_kernel, alpha):
         return ED.shard_dcml_state(
             jax.tree_util.tree_map(jnp.asarray, st0_host), mesh)
 
-    phases = bench_phases(data_sh, split, opt, fresh_sharded(), mesh,
-                          num_clients, batch_size, use_kernel=use_kernel)
-
     records = []
     for pipeline in ("sync", "double_buffered"):
+        phases = bench_phases(data_sh, split, opt, fresh_sharded(), mesh,
+                              num_clients, batch_size,
+                              use_kernel=use_kernel, alpha=alpha,
+                              pipeline=pipeline)
         sharded = ED.make_sfpl_epoch_sharded(
             split, opt, opt, data_sh, mesh=mesh, num_clients=num_clients,
             batch_size=batch_size, use_kernel=use_kernel, alpha=alpha,
@@ -201,7 +231,8 @@ def bench_config(num_clients, batch_size, *, epochs, use_kernel, alpha):
               f"pooled={rec['pooled_batch']:4d} {pipeline:15s}  "
               f"single {t_single:.3f}s  sharded {t_sharded:.3f}s  "
               f"dloss {rec['max_loss_delta']:.2e}  "
-              f"[perm {phases['perm_build_s']*1e3:.1f}ms | exch "
+              f"[perm {phases['perm_build_s']*1e3:.1f}ms | plan "
+              f"{phases['plan_build_s']*1e3:.1f}ms | exch "
               f"{phases['exchange_s']*1e3:.1f}ms | srv "
               f"{phases['server_update_s']*1e3:.1f}ms]", flush=True)
         records.append(rec)

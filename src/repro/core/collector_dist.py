@@ -3,44 +3,59 @@
 `collector.distributed_shuffle` lets XLA choose the collectives for the
 global permutation gather. This module is the paper-faithful explicit
 schedule — Algorithm 1's collect -> shuffle -> scatter written as
-`shard_map` with `jax.lax.all_to_all`:
+`shard_map` with `jax.lax.all_to_all` — organised around a precomputed
+**route plan**:
 
   1. every data shard (client group) holds a (B_local, ...) slab of smashed
      data;
-  2. the permutation is decomposed into (destination shard, destination row)
-     pairs; rows are bucketed by destination shard locally;
-  3. one `all_to_all` exchanges the buckets;
-  4. each shard locally orders its received rows.
+  2. because the permutation is REPLICATED, the routing metadata — the
+     scatter-based O(n) inverse permutation, each row's destination shard,
+     its slot in the send bucket, and the receive-side placement — is built
+     ONCE per permutation (``build_route_plans``) and shared by the forward
+     exchange, the custom-VJP backward exchange, and the streaming
+     collector's ``route_back``;
+  3. the exchange itself is gather -> ONE ``all_to_all`` -> gather: the
+     plan's ``send_idx`` gathers rows directly into send-bucket layout, the
+     collective ships the buckets, and ``recv_idx`` gathers received rows
+     into output order. No positions or validity masks ever travel over
+     the wire — receive placement is derived locally from the plan.
 
-The same function with the inverse permutation is the de-shuffle, so the
-gradient routing of Algorithm 1 is `shuffle_shard_map(g, inverse_permutation
-(perm), ...)` — and because every step is jax-native, autodiff through the
-forward shuffle produces exactly that (tested in tests/test_collector_dist).
+Balanced and grouped-balanced permutations get a **dense fast path**: their
+per-pair bucket loads are deterministic (exactly b/S_g rows between the
+shards of a flush group), so the plan is built at the exact capacity
+(``exact_pair_cap``) with ``may_drop=False`` — zero slack padding for one
+global flush, no overflow accounting, no pad row, and both sides of the
+exchange are pure row gathers (the shapes the Pallas ``bucket_permute`` /
+``unbucket_permute`` kernels fuse into one-pass HBM copies).
+
+The same plan machinery with the inverse permutation is the de-shuffle, so
+the gradient routing of Algorithm 1 is one more plan exchange — and because
+``plan_shuffle`` registers the backward plan as its custom-VJP residual,
+autodiff through the forward shuffle reuses the metadata instead of
+re-deriving it (no argsort anywhere on the exchange path; tested in
+tests/test_route_plan.py).
 
 Capacity note: a random permutation may route more rows from one source
-shard to one destination shard than the bucket holds; the exchange uses a
-per-pair capacity buffer of ``cap = int(B_local * slack) // n_shards + 1``
-with validity masks. Overflowing rows are SILENTLY DROPPED (zeros in the
-output) unless checked:
+shard to one destination shard than the bucket holds; slack-buffered plans
+(``may_drop=True``) use a per-pair capacity of ``cap = int(B_local *
+slack) // n_shards + 1``. Overflowing rows are routed to an out-of-bounds
+slot (never clobbering an in-capacity row) and arrive as zeros unless
+checked:
 
   * ``max_pair_load(perm, n_shards)`` — host-side: the worst (src, dst)
     bucket load of a permutation; compare against ``pair_capacity``.
   * ``assert_pair_capacity(perm, ...)`` — host-side hard failure.
   * ``shuffle_shard_map(..., check_capacity=True)`` — in-graph
-    ``jax.debug.callback`` that raises from inside the jitted program.
+    ``jax.debug.callback`` on the plan's replicated overflow count that
+    raises from inside the jitted program.
 
-For production the collector uses balanced block permutations
-(``make_balanced_perm``) that are drop-free at ``slack=1.0`` by
-construction (exactly B_local/n_shards rows per pair).
-
-Streaming (double-buffered) collector: the exchange is also exposed as
-two halves so a software pipeline can put client compute between them —
-``exchange_issue`` buckets a slab's rows by destination shard and hands
-them to ``all_to_all`` (the in-flight buffer slot), ``exchange_complete``
-places the received rows at their local output offsets. The composition
-is exactly ``shuffle_shard_map`` (same bucketing code), and the whole
-shuffle keeps the inverse-permutation custom VJP: the backward pass is
-one more issue/complete exchange with ``argsort(perm)``.
+Streaming (double-buffered) collector: the exchange is also exposed as two
+halves so a software pipeline can put client compute between them —
+``plan_exchange_issue`` buckets a slab's rows and hands them to
+``all_to_all`` (the in-flight buffer slot), ``plan_exchange_complete``
+places the received rows. The slot carries its plan, and the whole shuffle
+keeps the inverse-permutation routing: the backward pass is one more
+issue/complete exchange with the plan built from the inverse permutation.
 
 Shape/layout contract (all entry points):
 
@@ -48,10 +63,13 @@ Shape/layout contract (all entry points):
     ``b = N // n_shards``-row slabs over the mesh ``axis``;
   * ``perm``: ``(N,)`` int, replicated; output row ``i`` is ``x[perm[i]]``;
   * slack/capacity: each (src, dst) shard pair exchanges at most
-    ``pair_capacity(N, n_shards, slack)`` rows —
+    ``pair_capacity(N, n_shards, slack)`` rows — or exactly
+    ``exact_pair_cap(N, n_shards, group_sizes)`` on the dense path —
 
-    >>> pair_capacity(64, 8, 1.0)   # balanced: exactly b/S rows per pair
+    >>> pair_capacity(64, 8, 1.0)   # slack-buffered: b/S + 1 per pair
     2
+    >>> exact_pair_cap(64, 8)       # dense balanced: exactly b/S per pair
+    1
     >>> grouped_perm_slack(64, 8, [64])   # one global balanced flush
     1.0
     >>> int(pair_load(np.arange(8), 4).max())   # identity perm: diagonal
@@ -59,7 +77,9 @@ Shape/layout contract (all entry points):
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -158,18 +178,31 @@ def grouped_perm_slack(n, num_shards, group_sizes):
     load up to b). The buffer must hold the worst load. One global flush at
     b % S == 0 resolves to exactly 1.0, the drop-free balanced default."""
     b = n // num_shards
-    req = max((b // (size // b)) if size % b == 0 else b
-              for size in group_sizes)
-    return req * num_shards / b
+    return exact_pair_cap(n, num_shards, group_sizes) * num_shards / b
 
 
-def uniform_auto_slack(n, num_shards, group_sizes=None, *, probes=16,
-                       seed=0, margin=1):
-    """Auto-size the exchange slack for paper-faithful uniform shuffles by
-    probing ``max_pair_load`` over sample permutations (honouring flush
-    groups when given) and padding by ``margin`` rows. The bound is
-    empirical, not worst-case — pair it with ``check_capacity=True`` so an
-    unlucky draw raises instead of silently dropping rows."""
+def exact_pair_cap(n, num_shards, group_sizes=None):
+    """Exact worst (src, dst) bucket load of a (grouped) balanced
+    permutation — deterministic by construction, so a plan built at this
+    capacity is drop-free with ZERO slack padding (``may_drop=False``,
+    the dense fast path). A group spanning S_g whole shards loads exactly
+    b/S_g rows per pair inside the group; a group living inside one slab
+    keeps all its rows resident (self-pair load b).
+
+    >>> exact_pair_cap(64, 8)          # one global flush: b/S
+    1
+    >>> exact_pair_cap(64, 8, [32, 32])
+    2
+    """
+    b = n // num_shards
+    sizes = list(group_sizes) if group_sizes else [n]
+    return max((b // (size // b)) if size % b == 0 else b
+               for size in sizes)
+
+
+@functools.lru_cache(maxsize=None)
+def _uniform_auto_slack_cached(n, num_shards, group_sizes, probes, seed,
+                               margin):
     rng = np.random.default_rng(seed)
     sizes = list(group_sizes) if group_sizes else [n]
     worst = 0
@@ -181,6 +214,22 @@ def uniform_auto_slack(n, num_shards, group_sizes=None, *, probes=16,
         worst = max(worst, max_pair_load(np.concatenate(parts), num_shards))
     b = n // num_shards
     return (worst + margin) * num_shards / b
+
+
+def uniform_auto_slack(n, num_shards, group_sizes=None, *, probes=16,
+                       seed=0, margin=1):
+    """Auto-size the exchange slack for paper-faithful uniform shuffles by
+    probing ``max_pair_load`` over sample permutations (honouring flush
+    groups when given) and padding by ``margin`` rows. The bound is
+    empirical, not worst-case — pair it with ``check_capacity=True`` so an
+    unlucky draw raises instead of silently dropping rows.
+
+    The host-side probing is memoized on ``(n, num_shards, group_sizes,
+    probes, seed, margin)``, so re-tracing a jitted epoch never re-runs
+    the ``probes`` sample permutations."""
+    key = tuple(group_sizes) if group_sizes is not None else None
+    return _uniform_auto_slack_cached(n, num_shards, key, probes, seed,
+                                      margin)
 
 
 def mesh_axis_size(mesh, axis):
@@ -236,45 +285,128 @@ def _raise_on_overflow(count):
             f"capacity exceeded — raise slack or use make_balanced_perm")
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("mesh", "axis", "slack", "use_kernel", "check_capacity"))
-def shuffle_shard_map(x, perm, *, mesh, axis="data", slack=2.0,
-                      use_kernel=False, check_capacity=False):
-    """x: (N, ...) sharded over ``axis`` on dim 0; perm: (N,) replicated.
+# --------------------------------------------------------------------------
+# route plans
 
-    Returns x[perm] with the same sharding, via an explicit all_to_all.
 
-    Differentiable by construction: the registered VJP is this very
-    function with the inverse permutation (Algorithm 1's de-shuffle), so
-    the backward pass is one more all_to_all with the same schedule. The
-    VJP is registered at this level — not inside the shard_map body —
-    because per-shard (data-dependent) custom_vjp residuals do not survive
-    shard_map transposition with replication checking off.
+@dataclasses.dataclass(frozen=True)
+class RoutePlan:
+    """Precomputed routing metadata of one exchange direction.
 
-    ``use_kernel`` routes the local bucket permute through the Pallas
-    ``collector_permute`` gather kernel (interpret-mode off-TPU);
-    ``check_capacity`` adds an in-graph ``jax.debug.callback`` that raises
-    if any (src, dst) bucket overflows instead of silently zero-filling.
+    Built once per (replicated) permutation and shared across every use of
+    that direction — the forward exchange, the custom-VJP backward
+    exchange, and the streaming collector's ``route_back``. Both exchange
+    sides are pure row gathers driven by the plan:
+
+      * ``send_idx``: ``(n_shards, n_shards * cap)`` int32 — on shard
+        ``s``, flattened (destination shard, bucket slot) -> local source
+        row. Slots no row occupies point at row 0; they are never read on
+        the receive side, so no masking or zero-fill of the send buffer is
+        needed.
+      * ``recv_idx``: ``(n_shards, b)`` int32 — on shard ``d``, local
+        output row -> flattened (source shard, bucket slot) of the
+        received block. On slack-buffered plans (``may_drop=True``) a
+        dropped row points at the appended zero pad row ``n_shards*cap``.
+      * ``overflow``: replicated count of rows exceeding ``cap`` (the rows
+        a ``check_capacity`` callback reports); ``None`` on dense plans,
+        whose loads are deterministic.
+
+    Static metadata: ``n`` (global rows), ``n_shards``, ``cap`` (bucket
+    rows per shard pair), ``may_drop``. ``dense`` means the send buffer
+    has zero slack padding: ``n_shards * cap == b`` with drops impossible.
     """
-    impl = functools.partial(_shuffle_impl, mesh=mesh, axis=axis,
-                             slack=slack, use_kernel=use_kernel,
-                             check_capacity=check_capacity)
+    send_idx: jax.Array
+    recv_idx: jax.Array
+    overflow: Optional[jax.Array]
+    n: int
+    n_shards: int
+    cap: int
+    may_drop: bool
 
-    @jax.custom_vjp
-    def shuf(x, perm):
-        return impl(x, perm)
+    @property
+    def dense(self):
+        return (not self.may_drop
+                and self.n_shards * self.cap == self.n // self.n_shards)
 
-    def shuf_fwd(x, perm):
-        return impl(x, perm), perm
 
-    def shuf_bwd(perm, g):
-        # exact for drop-free perms; under bucket overflow the forward
-        # already lost rows (see check_capacity), so exactness is moot
-        return impl(g, jnp.argsort(perm)), None
+jax.tree_util.register_dataclass(
+    RoutePlan, data_fields=["send_idx", "recv_idx", "overflow"],
+    meta_fields=["n", "n_shards", "cap", "may_drop"])
 
-    shuf.defvjp(shuf_fwd, shuf_bwd)
-    return shuf(x, perm)
+
+def inverse_permutation_scatter(perm):
+    """O(n) scatter-based inverse permutation: ``inv[perm[i]] = i``.
+
+    Replaces the exchange path's ``argsort`` (O(n log n), and previously
+    re-derived on every call, forward and backward)."""
+    n = perm.shape[0]
+    return jnp.zeros((n,), jnp.int32).at[perm].set(
+        jnp.arange(n, dtype=jnp.int32))
+
+
+def _build_one_plan(out_pos, n_shards, cap, may_drop):
+    """Plan of the exchange whose source row ``g`` lands at global output
+    position ``out_pos[g]`` (i.e. ``out_pos`` is the inverse of the
+    permutation being applied). O(n * n_shards), no sorts."""
+    n = out_pos.shape[0]
+    b = n // n_shards
+    g = jnp.arange(n, dtype=jnp.int32)
+    src_shard = g // b
+    local_row = g % b
+    dest = (out_pos // b).astype(jnp.int32)
+    # rank of row g within its (src_shard, dest) bucket, in ascending-g
+    # order: a per-slab running count of destinations (one-hot cumsum) —
+    # both exchange sides read the same rank, so any consistent order works
+    oh = jax.nn.one_hot(dest.reshape(n_shards, b), n_shards,
+                        dtype=jnp.int32)
+    cum = jnp.cumsum(oh, axis=1)
+    rank = (jnp.take_along_axis(
+        cum, dest.reshape(n_shards, b, 1), axis=2) - 1).reshape(n)
+    ok = rank < cap
+    # overflowing rows go to an OOB slot and are DROPPED by the scatter —
+    # they can never clobber an in-capacity row's slot
+    slot = jnp.where(ok, dest * cap + rank, n_shards * cap)
+    send_idx = jnp.zeros((n_shards, n_shards * cap), jnp.int32).at[
+        src_shard, slot].set(local_row, mode="drop")
+    out_local = jnp.where(ok, out_pos % b, b)
+    init = (jnp.full((n_shards, b), n_shards * cap, jnp.int32)
+            if may_drop else jnp.zeros((n_shards, b), jnp.int32))
+    recv_idx = init.at[dest, out_local].set(src_shard * cap + rank,
+                                            mode="drop")
+    overflow = jnp.sum(~ok).astype(jnp.int32) if may_drop else None
+    return RoutePlan(send_idx, recv_idx, overflow, int(n), n_shards,
+                     int(cap), bool(may_drop))
+
+
+def build_route_plan(perm, n_shards, *, cap, may_drop=True):
+    """Forward-direction plan of ``out[i] = x[perm[i]]``.
+
+    Contract: ``may_drop=False`` asserts the permutation's max (src, dst)
+    pair load is <= ``cap`` (true by construction for (grouped-)balanced
+    perms at ``exact_pair_cap``); routing under a violating perm is
+    undefined — keep ``may_drop=True`` (and ``check_capacity``) for any
+    permutation whose loads are not deterministic."""
+    perm = perm.astype(jnp.int32)
+    return _build_one_plan(inverse_permutation_scatter(perm), n_shards,
+                           cap, may_drop)
+
+
+def build_route_plans(perm, n_shards, *, cap, may_drop=True):
+    """(forward, backward) plans of a permutation, sharing one O(n)
+    inverse: the backward exchange applies ``argsort(perm)``, whose
+    inverse is ``perm`` itself — so BOTH plans come from the same two
+    arrays and the gradient de-shuffle re-derives nothing. The bucket-load
+    matrix of the inverse permutation is the transpose of the forward
+    one, so one ``cap`` covers both directions."""
+    perm = perm.astype(jnp.int32)
+    inv = inverse_permutation_scatter(perm)
+    fwd = _build_one_plan(inv, n_shards, cap, may_drop)
+    bwd = _build_one_plan(perm, n_shards, cap, may_drop)
+    return fwd, bwd
+
+
+# --------------------------------------------------------------------------
+# plan-driven exchange: gather -> ONE all_to_all -> gather
 
 
 def _shard_map_maybe_norep(local, *, mesh, in_specs, out_specs, norep):
@@ -291,100 +423,197 @@ def _shard_map_maybe_norep(local, *, mesh, in_specs, out_specs, norep):
     return shard_map(local, **kwargs)
 
 
-def exchange_issue(x, perm, *, mesh, axis="data", slack=2.0,
-                   use_kernel=False, check_capacity=False):
-    """First (issue) half of the split exchange: bucket this shard's rows
-    by destination shard and hand them to ``all_to_all``.
+def _gather_rows(x, idx, *, use_kernel, bucket_shape=None):
+    """Row gather ``x[idx]``, optionally through the fused Pallas kernels:
+    ``bucket_shape=(S, cap)`` routes through the two-level ``bucket_permute``
+    (send side), ``None`` through the flat ``unbucket_permute`` mirror
+    (receive side)."""
+    if use_kernel and jnp.issubdtype(x.dtype, jnp.floating):
+        from repro.kernels.collector_permute.ops import (bucket_permute,
+                                                         unbucket_permute)
+        interpret = jax.default_backend() != "tpu"
+        if bucket_shape is not None:
+            return bucket_permute(x, idx.reshape(bucket_shape),
+                                  interpret=interpret)
+        return unbucket_permute(x, idx, interpret=interpret)
+    return x[idx]
 
-    Returns the in-flight buffer slot — a ``(rows, pos, valid)`` triple
-    whose leading dims are sharded over ``axis``: per shard, ``rows`` is
-    the ``(n_shards, cap, ...)`` received bucket block, ``pos`` the global
-    output offset of each received row, ``valid`` its occupancy mask.
-    Nothing about the slot depends on later compute, so a scheduler is
-    free to overlap the collective with whatever runs between ``issue``
-    and ``complete`` — the hook the double-buffered streaming collector
-    pipelines client forwards into.
-    """
-    n = x.shape[0]
-    n_shards = mesh_axis_size(mesh, axis)
-    b = n // n_shards
-    cap = pair_capacity(n, n_shards, slack)
-    interpret = jax.default_backend() != "tpu"
 
-    def local_permute(rows, idx):
-        if use_kernel:
-            from repro.kernels.collector_permute.ops import (
-                collector_permute_ad)
-            return collector_permute_ad(rows, idx, interpret)
-        return rows[idx]
+def plan_exchange(x, plan, *, mesh, axis="data", use_kernel=False,
+                  check_capacity=False):
+    """One full exchange under a route plan: bucket-gather this shard's
+    rows into send layout, ship them with ONE ``all_to_all``, and gather
+    the received block into output order. Not differentiable on its own —
+    ``plan_shuffle`` supplies the VJP from the backward plan, and the
+    streaming collector routes gradients explicitly.
 
-    def local(x_loc, perm):
-        # which of MY rows does each shard need?
-        # shard s needs my row r if perm[s*b + j] == sid*b + r for some j.
-        # build send buckets: for each destination shard, up to cap rows.
-        sid = jax.lax.axis_index(axis)
-        inv = jnp.argsort(perm)                       # inv[g] = output pos
-        my_rows_global = jnp.arange(b) + sid * b
-        out_pos = inv[my_rows_global]                 # where my rows go
-        dest = out_pos // b                           # destination shard
-        # rank of each of my rows within its destination bucket
-        order = jnp.argsort(dest)
-        dsorted = dest[order]
-        first = jnp.searchsorted(dsorted, dsorted, side="left")
-        rank = jnp.arange(b) - first
-        if check_capacity:
-            jax.debug.callback(_raise_on_overflow, jnp.sum(rank >= cap))
-        send = jnp.zeros((n_shards, cap) + x_loc.shape[1:], x_loc.dtype)
-        send_pos = jnp.zeros((n_shards, cap), jnp.int32)
-        slot_d = dsorted
-        slot_r = jnp.minimum(rank, cap - 1)
-        rows_sorted = local_permute(x_loc, order)
-        send = send.at[slot_d, slot_r].set(rows_sorted)
-        send_pos = send_pos.at[slot_d, slot_r].set(out_pos[order])
-        valid = jnp.zeros((n_shards, cap), bool).at[slot_d, slot_r].set(
-            rank < cap)
-        # exchange buckets: the in-flight half of the pipeline
-        recv = jax.lax.all_to_all(send, axis, 0, 0, tiled=False)
-        recv_pos = jax.lax.all_to_all(send_pos, axis, 0, 0, tiled=False)
-        recv_valid = jax.lax.all_to_all(valid, axis, 0, 0, tiled=False)
-        return recv, recv_pos, recv_valid
+    Deliberately NOT composed from ``plan_exchange_issue`` +
+    ``plan_exchange_complete``: the sync exchange keeps both gathers and
+    the collective in one shard_map region (one SPMD program, no sharded
+    bucket intermediate crossing a shard_map boundary); the split halves
+    exist so the streaming pipeline can put compute between them.
+    tests/test_streaming.py pins the composition row-for-row equal."""
+    S, cap = plan.n_shards, plan.cap
+    check = check_capacity and plan.overflow is not None
+
+    def local(x_loc, send_idx, recv_idx, *overflow):
+        if check:
+            # raised inside EVERY shard's program, so all collective
+            # participants abort together instead of deadlocking the
+            # all_to_all rendezvous on the survivors
+            jax.debug.callback(_raise_on_overflow, overflow[0])
+        bucket = _gather_rows(x_loc, send_idx[0], use_kernel=use_kernel,
+                              bucket_shape=(S, cap))
+        recv = jax.lax.all_to_all(
+            bucket.reshape((S, cap) + x_loc.shape[1:]), axis, 0, 0,
+            tiled=False)
+        flat = recv.reshape((S * cap,) + x_loc.shape[1:])
+        if plan.may_drop:
+            flat = jnp.concatenate(
+                [flat, jnp.zeros((1,) + flat.shape[1:], flat.dtype)])
+        return _gather_rows(flat, recv_idx[0], use_kernel=use_kernel)
+
+    ex = _shard_map_maybe_norep(
+        local, mesh=mesh,
+        in_specs=(P(axis), P(axis), P(axis)) + ((P(),) if check else ()),
+        out_specs=P(axis), norep=use_kernel)
+    args = (x, plan.send_idx, plan.recv_idx)
+    return ex(*args + ((plan.overflow,) if check else ()))
+
+
+def plan_exchange_issue(x, plan, *, mesh, axis="data", use_kernel=False,
+                        check_capacity=False):
+    """First (issue) half of the split exchange: bucket-gather this shard's
+    rows by destination and hand them to ``all_to_all``.
+
+    Returns the in-flight buffer slot — ``(recv, plan)`` where ``recv`` is
+    the received bucket block (leading dim sharded over ``axis``). Unlike
+    the pre-plan exchange, the slot is ONE array: positions and validity
+    never travel over the wire, the completion side derives placement from
+    the plan. Nothing about the slot depends on later compute, so a
+    scheduler is free to overlap the collective with whatever runs between
+    ``issue`` and ``complete`` — the hook the double-buffered streaming
+    collector pipelines client forwards into."""
+    S, cap = plan.n_shards, plan.cap
+    check = check_capacity and plan.overflow is not None
+
+    def local(x_loc, send_idx, *overflow):
+        if check:
+            jax.debug.callback(_raise_on_overflow, overflow[0])
+        bucket = _gather_rows(x_loc, send_idx[0], use_kernel=use_kernel,
+                              bucket_shape=(S, cap))
+        return jax.lax.all_to_all(
+            bucket.reshape((S, cap) + x_loc.shape[1:]), axis, 0, 0,
+            tiled=False)
 
     issue = _shard_map_maybe_norep(
-        local, mesh=mesh, in_specs=(P(axis), P()),
-        out_specs=(P(axis), P(axis), P(axis)), norep=use_kernel)
-    return issue(x, perm)
+        local, mesh=mesh,
+        in_specs=(P(axis), P(axis)) + ((P(),) if check else ()),
+        out_specs=P(axis), norep=use_kernel)
+    return issue(*(x, plan.send_idx)
+                 + ((plan.overflow,) if check else ())), plan
+
+
+def plan_exchange_complete(slot, *, mesh, axis="data", use_kernel=False):
+    """Second (complete) half: gather the received bucket block of a
+    ``plan_exchange_issue`` slot into local output order."""
+    recv, plan = slot
+    S, cap = plan.n_shards, plan.cap
+
+    def local(recv, recv_idx):
+        flat = recv.reshape((S * cap,) + recv.shape[2:])
+        if plan.may_drop:
+            flat = jnp.concatenate(
+                [flat, jnp.zeros((1,) + flat.shape[1:], flat.dtype)])
+        return _gather_rows(flat, recv_idx[0], use_kernel=use_kernel)
+
+    complete = _shard_map_maybe_norep(
+        local, mesh=mesh, in_specs=(P(axis), P(axis)),
+        out_specs=P(axis), norep=use_kernel)
+    return complete(recv, plan.recv_idx)
+
+
+def plan_shuffle(x, plans, *, mesh, axis="data", use_kernel=False,
+                 check_capacity=False):
+    """Differentiable plan exchange: ``plans`` is the ``(forward,
+    backward)`` pair from ``build_route_plans``. The registered VJP is the
+    plan exchange with the BACKWARD plan (Algorithm 1's de-shuffle) —
+    carried as the custom-VJP residual, so the backward pass issues one
+    more ``all_to_all`` and re-derives no routing metadata. The VJP is
+    registered at this level — not inside the shard_map body — because
+    per-shard (data-dependent) custom_vjp residuals do not survive
+    shard_map transposition with replication checking off."""
+    impl = functools.partial(plan_exchange, mesh=mesh, axis=axis,
+                             use_kernel=use_kernel)
+
+    @jax.custom_vjp
+    def shuf(x, fwd_plan, bwd_plan):
+        return impl(x, fwd_plan, check_capacity=check_capacity)
+
+    def shuf_fwd(x, fwd_plan, bwd_plan):
+        return impl(x, fwd_plan, check_capacity=check_capacity), bwd_plan
+
+    def shuf_bwd(bwd_plan, g):
+        # exact for drop-free plans; under bucket overflow the forward
+        # already lost rows (see check_capacity), so exactness is moot
+        return impl(g, bwd_plan), None, None
+
+    shuf.defvjp(shuf_fwd, shuf_bwd)
+    return shuf(x, *plans)
+
+
+# --------------------------------------------------------------------------
+# perm-level entry points (plan built on the fly)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("mesh", "axis", "slack", "use_kernel", "check_capacity"))
+def shuffle_shard_map(x, perm, *, mesh, axis="data", slack=2.0,
+                      use_kernel=False, check_capacity=False):
+    """x: (N, ...) sharded over ``axis`` on dim 0; perm: (N,) replicated.
+
+    Returns x[perm] with the same sharding, via one explicit all_to_all.
+
+    Convenience wrapper over the plan machinery for callers holding a bare
+    permutation: builds the (forward, backward) plans at the slack-derived
+    capacity and applies ``plan_shuffle``. The round engine builds plans
+    itself (``round.MeshAllToAll.prepare``) so one plan pair serves the
+    label permute, the activation permute, and the backward exchange.
+
+    ``use_kernel`` routes the local bucket gathers through the Pallas
+    ``bucket_permute``/``unbucket_permute`` kernels (interpret-mode
+    off-TPU); ``check_capacity`` adds an in-graph ``jax.debug.callback``
+    that raises if any (src, dst) bucket overflows instead of zero-filling
+    the overflowing rows."""
+    n = x.shape[0]
+    n_shards = mesh_axis_size(mesh, axis)
+    cap = pair_capacity(n, n_shards, slack)
+    plans = build_route_plans(perm, n_shards, cap=cap, may_drop=True)
+    return plan_shuffle(x, plans, mesh=mesh, axis=axis,
+                        use_kernel=use_kernel,
+                        check_capacity=check_capacity)
+
+
+def exchange_issue(x, perm, *, mesh, axis="data", slack=2.0,
+                   use_kernel=False, check_capacity=False):
+    """Perm-level convenience for ``plan_exchange_issue``: builds the
+    forward plan at the slack-derived capacity and issues the exchange.
+    Returns the in-flight ``(recv, plan)`` slot."""
+    n = x.shape[0]
+    n_shards = mesh_axis_size(mesh, axis)
+    cap = pair_capacity(n, n_shards, slack)
+    plan = build_route_plan(perm, n_shards, cap=cap, may_drop=True)
+    return plan_exchange_issue(x, plan, mesh=mesh, axis=axis,
+                               use_kernel=use_kernel,
+                               check_capacity=check_capacity)
 
 
 def exchange_complete(slot, n, *, mesh, axis="data"):
-    """Second (complete) half of the split exchange: place the received
-    rows of an ``exchange_issue`` buffer slot at their local output
-    offsets. ``n`` is the global row count of the shuffled array;
-    ``exchange_complete(exchange_issue(x, perm, ...), x.shape[0], ...)``
-    equals ``shuffle_shard_map(x, perm, ...)`` row for row."""
-    recv, recv_pos, recv_valid = slot
-    n_shards = mesh_axis_size(mesh, axis)
-    b = n // n_shards
-    cap = recv.shape[1]
-
-    def local(recv, recv_pos, recv_valid):
-        sid = jax.lax.axis_index(axis)
-        flat = recv.reshape((n_shards * cap,) + recv.shape[2:])
-        fpos = recv_pos.reshape(-1) - sid * b
-        fval = recv_valid.reshape(-1)
-        fpos = jnp.where(fval, fpos, b)               # dropped -> OOB
-        out = jnp.zeros((b,) + recv.shape[2:], recv.dtype)
-        out = out.at[fpos].set(flat, mode="drop")
-        return out
-
-    complete = _shard_map_maybe_norep(
-        local, mesh=mesh, in_specs=(P(axis), P(axis), P(axis)),
-        out_specs=P(axis), norep=False)
-    return complete(recv, recv_pos, recv_valid)
-
-
-def _shuffle_impl(x, perm, *, mesh, axis, slack, use_kernel,
-                  check_capacity):
-    slot = exchange_issue(x, perm, mesh=mesh, axis=axis, slack=slack,
-                          use_kernel=use_kernel,
-                          check_capacity=check_capacity)
-    return exchange_complete(slot, x.shape[0], mesh=mesh, axis=axis)
+    """Perm-level convenience for ``plan_exchange_complete``; ``n`` is the
+    global row count of the shuffled array (checked against the slot's
+    plan). ``exchange_complete(exchange_issue(x, perm, ...), x.shape[0],
+    ...)`` equals ``shuffle_shard_map(x, perm, ...)`` row for row."""
+    _, plan = slot
+    assert plan.n == n, (plan.n, n)
+    return plan_exchange_complete(slot, mesh=mesh, axis=axis)

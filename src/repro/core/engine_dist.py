@@ -8,10 +8,12 @@ a ``DataMesh`` placement over a ``("data",)`` axis:
 
   * SFPL: client params / BN state / optimizer state are sharded on the
     leading client axis; the pooled smashed stack (N*B rows, client-major)
-    inherits that sharding; the collector shuffle is one explicit
-    ``jax.lax.all_to_all`` per step (``MeshAllToAll`` strategy). Gradient
-    DE-shuffling is not coded anywhere: the server loss is a function of
-    the pre-shuffle pooled stack, so autodiff emits the inverse all_to_all.
+    inherits that sharding; the collector shuffle is ONE explicit
+    ``jax.lax.all_to_all`` per exchange direction (``MeshAllToAll``
+    strategy over a per-step precomputed ``RoutePlan`` — rows only, no
+    position/validity traffic). Gradient DE-shuffling is not coded
+    anywhere: the server loss is a function of the pre-shuffle pooled
+    stack, so autodiff emits the exchange under the plan's backward half.
     Collector modes: "balanced" (drop-free block permutations; per-flush-
     group when ``alpha < 1``, aligned to shard boundaries) and "uniform"
     (paper-faithful uniform shuffle, slack auto-sized from probe
@@ -153,7 +155,7 @@ def fit_shards(num_clients, batch_size, *, scheme="sfpl", alpha=1.0,
 
 def sfpl_epoch_sharded(key, st, data, split: SplitModel, opt_c, opt_s, *,
                        mesh, num_clients, batch_size, bn_mode="cmsd",
-                       alpha=1.0, use_kernel=False, slack=None,
+                       alpha=1.0, use_kernel=None, slack=None,
                        check_capacity=False, axis="data",
                        collector_mode="balanced",
                        collector_pipeline="sync", stream_slack=None):
@@ -177,7 +179,11 @@ def sfpl_epoch_sharded(key, st, data, split: SplitModel, opt_c, opt_s, *,
     group drained after the loop; ``"sync"`` (default) is the blocking
     single-exchange parity oracle. ``stream_slack`` overrides the
     streaming pipeline's per-group buffer sizing (default: capacity-safe
-    ``n_shards``).
+    ``n_shards``). ``use_kernel=None`` (auto, the default) fuses the
+    exchange's local bucket gathers into the Pallas
+    ``bucket_permute``/``unbucket_permute`` kernels on TPU — where the
+    one-pass HBM copies win — and keeps the jnp gathers elsewhere;
+    pass True/False to force.
     """
     n_shards = mesh_axis_size(mesh, axis)
     check_sfpl_layout(num_clients, batch_size, n_shards, alpha=alpha,

@@ -16,14 +16,24 @@ This module is the single implementation both delegate to:
     after the last group — the paper's threshold-queue collector as a
     two-slot software pipeline).
 
+The mesh strategies are driven by precomputed **route plans**
+(``collector_dist.RoutePlan``): because the permutation is replicated,
+``prepare`` builds the routing metadata — O(n) scatter inverse, per-row
+destination shard, bucket slot, receive placement — ONCE per step and
+``sfpl_round`` threads the prepared permutation through the scan body, so
+the label permute, the activation permute, the custom-VJP backward
+exchange, and the streaming ``route_back`` all share it. Balanced and
+grouped-balanced modes run the dense fast path (exact per-pair capacity,
+no overflow accounting, zero slack padding for one global flush).
+
 Gradient DE-shuffling is never hand-derived: ``DenseTake`` and
 ``MeshAllToAll`` expose a differentiable ``permute`` and the server loss
 is taken as a function of the PRE-shuffle pooled stack, so autodiff emits
-the inverse route (dense scatter or the inverse all_to_all) and hands
-each client exactly its own activation gradients. ``StreamingAllToAll``
-assembles the shuffled pool outside the loss (the forwards must
-interleave with the exchanges), so it routes explicitly —
-``route_back`` is the identical inverse-permutation exchange.
+the inverse route (dense scatter or the plan exchange with the backward
+plan) and hands each client exactly its own activation gradients.
+``StreamingAllToAll`` assembles the shuffled pool outside the loss (the
+forwards must interleave with the exchanges), so it routes explicitly —
+``route_back`` is the identical exchange under the backward plans.
 
 Shape contract shared by every strategy: the pool is client-major,
 ``(num_clients * batch_size, ...)`` with row ``c * batch_size + j`` being
@@ -49,7 +59,7 @@ never the visitation loop.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -58,9 +68,31 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.core import collector as C
 from repro.core.bn_policy import fedavg, aggregate_bn_state
 from repro.core.collector_dist import (
-    exchange_complete, exchange_issue, grouped_perm_slack,
-    make_grouped_balanced_perm, mesh_axis_size, shuffle_shard_map,
-    uniform_auto_slack)
+    build_route_plans, exact_pair_cap, make_grouped_balanced_perm,
+    mesh_axis_size, pair_capacity, plan_exchange, plan_exchange_complete,
+    plan_exchange_issue, plan_shuffle, uniform_auto_slack)
+
+
+class PreparedPerm(NamedTuple):
+    """A step's permutation with its precomputed routing: ``plans`` is the
+    strategy-specific payload — ``None`` for ``DenseTake``, one
+    ``(forward, backward)`` ``RoutePlan`` pair for ``MeshAllToAll``, and a
+    per-flush-group tuple of pairs for ``StreamingAllToAll``. Built once
+    per scan step (``collector.prepare``) and shared by every use of the
+    permutation in that step: the label permute, the activation permute,
+    the custom-VJP backward exchange, and the streaming route_back."""
+    perm: jax.Array
+    plans: object
+
+
+def resolve_use_kernel(flag):
+    """``None`` means auto: the fused Pallas bucket kernels are on where
+    they win — compiled TPU lowering — and off elsewhere (off-TPU they
+    only run in interpret mode, which the CPU-harness benchmarks show
+    losing to the jnp gathers)."""
+    if flag is None:
+        return jax.default_backend() == "tpu"
+    return bool(flag)
 
 
 # --------------------------------------------------------------------------
@@ -131,7 +163,7 @@ class DataMesh:
         return jax.tree_util.tree_map(c, tree)
 
     def collector(self, num_clients, *, alpha=1.0, mode="balanced",
-                  slack=None, use_kernel=False, check_capacity=False,
+                  slack=None, use_kernel=None, check_capacity=False,
                   pipeline="sync", stream_slack=None):
         if pipeline not in ("sync", "double_buffered"):
             raise ValueError(f"unknown collector pipeline {pipeline!r}: "
@@ -158,7 +190,12 @@ class DenseTake:
     def make_perm(self, key, n):
         return C.make_flush_perm(key, n, self.num_clients, self.alpha)
 
-    def permute(self, x, perm):
+    def prepare(self, perm, n):
+        """A dense gather needs no routing metadata beyond the perm."""
+        return PreparedPerm(perm, None)
+
+    def permute(self, x, prep):
+        perm = prep.perm if isinstance(prep, PreparedPerm) else prep
         if self.use_kernel and jnp.issubdtype(x.dtype, jnp.floating):
             return C.shuffle(x, perm, use_kernel=True)
         return jnp.take(x, perm, axis=0)
@@ -166,16 +203,23 @@ class DenseTake:
 
 @dataclasses.dataclass(frozen=True)
 class MeshAllToAll:
-    """Algorithm 1's collector as one explicit ``all_to_all`` per step.
+    """Algorithm 1's collector as one explicit ``all_to_all`` per step,
+    driven by a per-step route plan (``prepare``).
 
     ``mode``:
-      * "balanced" — balanced block permutations (grouped when alpha < 1),
-        drop-free by construction at the auto-sized slack;
+      * "balanced" — balanced block permutations (grouped when alpha < 1)
+        whose per-pair bucket loads are deterministic, so the plan runs
+        the DENSE fast path: exact capacity (``exact_pair_cap``), no
+        overflow accounting, zero slack padding for one global flush;
       * "uniform"  — the paper-faithful uniform shuffle (identical perm
-        distribution to ``DenseTake``), with slack auto-sized from probe
-        ``max_pair_load`` draws and the in-graph capacity check forced on
-        so an unlucky permutation raises instead of dropping rows.
-    ``slack=None`` auto-sizes per mode; pass a float to override.
+        distribution to ``DenseTake``), slack-buffered with the capacity
+        auto-sized from probe ``max_pair_load`` draws and the in-graph
+        capacity check forced on so an unlucky permutation raises instead
+        of dropping rows.
+    ``slack=None`` auto-sizes per mode; pass a float to override (which
+    forces the slack-buffered plan shape even in balanced mode).
+    ``use_kernel=None`` (auto) fuses the local bucket gathers into the
+    Pallas kernels on TPU and keeps the jnp gathers elsewhere.
     """
     mesh: object
     num_clients: int
@@ -183,7 +227,7 @@ class MeshAllToAll:
     mode: str = "balanced"
     alpha: float = 1.0
     slack: Optional[float] = None
-    use_kernel: bool = False
+    use_kernel: Optional[bool] = None
     check_capacity: bool = False
 
     pipelined = False
@@ -193,15 +237,21 @@ class MeshAllToAll:
         return [c * per_client
                 for c in C.flush_group_sizes(self.num_clients, self.alpha)]
 
-    def resolved_slack(self, n):
-        if self.slack is not None:
-            return self.slack
+    def plan_spec(self, n):
+        """(cap, may_drop) of the step exchange's route plan. Balanced
+        modes get the exact capacity; they only skip overflow accounting
+        (the dense path) when the caller did NOT ask for the in-graph
+        capacity check — ``check_capacity=True`` must keep its raise-on-
+        overflow contract even against a mis-declared permutation."""
         n_shards = mesh_axis_size(self.mesh, self.axis)
+        if self.slack is not None:
+            return pair_capacity(n, n_shards, self.slack), True
         rows = self.group_rows(n)
         if self.mode == "uniform":
-            return uniform_auto_slack(
+            slack = uniform_auto_slack(
                 n, n_shards, rows if len(rows) > 1 else None)
-        return grouped_perm_slack(n, n_shards, rows)
+            return pair_capacity(n, n_shards, slack), True
+        return exact_pair_cap(n, n_shards, rows), self.check_capacity
 
     def make_perm(self, key, n):
         if self.mode == "uniform":
@@ -210,14 +260,28 @@ class MeshAllToAll:
         return make_grouped_balanced_perm(key, n, n_shards,
                                           self.group_rows(n))
 
-    def permute(self, x, perm):
-        use_k = self.use_kernel and jnp.issubdtype(x.dtype, jnp.floating)
-        check = self.check_capacity or (self.mode == "uniform"
-                                        and self.slack is None)
-        return shuffle_shard_map(
-            x, perm, mesh=self.mesh, axis=self.axis,
-            slack=self.resolved_slack(x.shape[0]),
-            use_kernel=use_k, check_capacity=check)
+    def prepare(self, perm, n):
+        """Build the (forward, backward) route plans once; every permute
+        and the VJP exchange of the step share them."""
+        cap, may_drop = self.plan_spec(n)
+        n_shards = mesh_axis_size(self.mesh, self.axis)
+        return PreparedPerm(perm, build_route_plans(
+            perm, n_shards, cap=cap, may_drop=may_drop))
+
+    def _check(self):
+        return self.check_capacity or (self.mode == "uniform"
+                                       and self.slack is None)
+
+    def _use_k(self, dtype):
+        return (resolve_use_kernel(self.use_kernel)
+                and jnp.issubdtype(dtype, jnp.floating))
+
+    def permute(self, x, prep):
+        if not isinstance(prep, PreparedPerm):
+            prep = self.prepare(prep, x.shape[0])
+        return plan_shuffle(
+            x, prep.plans, mesh=self.mesh, axis=self.axis,
+            use_kernel=self._use_k(x.dtype), check_capacity=self._check())
 
 
 @dataclasses.dataclass(frozen=True)
@@ -245,7 +309,10 @@ class StreamingAllToAll(MeshAllToAll):
     ``stream_slack`` sizes the per-group exchange buffers; the default
     ``None`` uses ``n_shards`` (capacity ``b_g + 1`` per pair), which
     admits ANY group permutation drop-free at the price of wider buffers —
-    streaming trades exchange bandwidth for overlap.
+    streaming trades exchange bandwidth for overlap. (The sync dense path
+    does not apply here: each group is RE-sharded over the whole mesh for
+    its own exchange, so even balanced group permutations have
+    non-deterministic per-pair loads under the group's finer slabs.)
 
     Layout contract: every flush group's row count must divide by the
     shard count (each group is row-sharded over the whole mesh for its
@@ -284,35 +351,65 @@ class StreamingAllToAll(MeshAllToAll):
         r0, r1 = bounds
         return jax.lax.slice_in_dim(perm, r0, r1, axis=0) - r0
 
-    def issue(self, rows, perm, bounds):
-        """Launch flush group ``bounds``'s exchange; returns the in-flight
-        buffer slot (``collector_dist.exchange_issue``)."""
-        use_k = self.use_kernel and jnp.issubdtype(rows.dtype,
-                                                   jnp.floating)
-        return exchange_issue(
-            rows, self._sub_perm(perm, bounds), mesh=self.mesh,
-            axis=self.axis, slack=self._sub_slack(),
-            use_kernel=use_k, check_capacity=self.check_capacity)
-
-    def complete(self, slot, bounds):
-        """Land an in-flight buffer slot: the group's shuffled rows."""
-        r0, r1 = bounds
-        return exchange_complete(slot, r1 - r0, mesh=self.mesh,
-                                 axis=self.axis)
-
-    def route_back(self, g_shuf, perm, n):
-        """Algorithm 1's de-shuffle, explicit: the per-group exchange with
-        the inverse permutation hands each client its own activation
-        gradients — move-for-move what autodiff emits for the synchronous
-        path, so trajectories stay bit-comparable."""
-        parts = []
+    def prepare(self, perm, n):
+        """Per-flush-group (forward, backward) route plans, built once per
+        step and shared by the issue/complete exchanges AND ``route_back``
+        — the streamed counterpart of ``MeshAllToAll.prepare``."""
+        n_shards = mesh_axis_size(self.mesh, self.axis)
+        plans = []
         for bounds in self.group_bounds(n):
+            n_g = bounds[1] - bounds[0]
+            cap = pair_capacity(n_g, n_shards, self._sub_slack())
+            plans.append(build_route_plans(
+                self._sub_perm(perm, bounds), n_shards, cap=cap,
+                may_drop=True))
+        return PreparedPerm(perm, tuple(plans))
+
+    def permute(self, x, prep):
+        """Blocking whole-pool shuffle under the per-group plans (used for
+        the label pool, which never interleaves with client compute):
+        each sealed flush group is one plan exchange."""
+        n = x.shape[0]
+        if not isinstance(prep, PreparedPerm):
+            prep = self.prepare(prep, n)
+        parts = []
+        for g, (r0, r1) in enumerate(self.group_bounds(n)):
+            parts.append(plan_shuffle(
+                jax.lax.slice_in_dim(x, r0, r1, axis=0), prep.plans[g],
+                mesh=self.mesh, axis=self.axis,
+                use_kernel=self._use_k(x.dtype),
+                check_capacity=self.check_capacity))
+        return _concat_parts(parts)
+
+    def issue(self, rows, prep, g):
+        """Launch flush group ``g``'s exchange; returns the in-flight
+        buffer slot (``collector_dist.plan_exchange_issue``)."""
+        return plan_exchange_issue(
+            rows, prep.plans[g][0], mesh=self.mesh, axis=self.axis,
+            use_kernel=self._use_k(rows.dtype),
+            check_capacity=self.check_capacity)
+
+    def complete(self, slot):
+        """Land an in-flight buffer slot: the group's shuffled rows."""
+        recv, _ = slot
+        return plan_exchange_complete(
+            slot, mesh=self.mesh, axis=self.axis,
+            use_kernel=self._use_k(recv.dtype))
+
+    def route_back(self, g_shuf, prep, n):
+        """Algorithm 1's de-shuffle, explicit: the per-group exchange with
+        the BACKWARD plan of the shared ``prepare`` hands each client its
+        own activation gradients — move-for-move what autodiff emits for
+        the synchronous path, so trajectories stay bit-comparable."""
+        if not isinstance(prep, PreparedPerm):
+            prep = self.prepare(prep, n)
+        parts = []
+        for g, bounds in enumerate(self.group_bounds(n)):
             r0, r1 = bounds
-            sub = self._sub_perm(perm, bounds)
-            parts.append(shuffle_shard_map(
+            parts.append(plan_exchange(
                 jax.lax.slice_in_dim(g_shuf, r0, r1, axis=0),
-                jnp.argsort(sub), mesh=self.mesh, axis=self.axis,
-                slack=self._sub_slack()))
+                prep.plans[g][1], mesh=self.mesh, axis=self.axis,
+                use_kernel=self._use_k(g_shuf.dtype)))
         return _concat_parts(parts)
 
 
@@ -320,9 +417,11 @@ def _concat_parts(parts):
     return parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=0)
 
 
-def streamed_shuffle(collector, perm, n, produce_group):
+def streamed_shuffle(collector, prep, n, produce_group):
     """Two-slot software pipeline over flush groups.
 
+    ``prep`` is the step's ``collector.prepare(perm, n)`` (a bare
+    permutation is accepted and prepared on the spot).
     ``produce_group(g)`` returns flush group ``g``'s pooled rows (the
     client forward of that group, in ``sfpl_round``). The filled slot's
     exchange is ISSUED before the next group's rows are produced and
@@ -335,19 +434,21 @@ def streamed_shuffle(collector, perm, n, produce_group):
     Returns the shuffled pool — row for row equal to
     ``collector.permute(pool, perm)`` on the synchronous strategy.
     """
+    if not isinstance(prep, PreparedPerm):
+        prep = collector.prepare(prep, n)
     bounds = collector.group_bounds(n)
     parts, slot = [], None
     for g in range(len(bounds)):
         ticket = None
         if slot is not None:
-            ticket = collector.issue(slot, perm, bounds[g - 1])
+            ticket = collector.issue(slot, prep, g - 1)
         rows = produce_group(g)
         if ticket is not None:
-            parts.append(collector.complete(ticket, bounds[g - 1]))
+            parts.append(collector.complete(ticket))
         slot = rows
     # drain epilogue: the last filled buffer is still in flight
     parts.append(collector.complete(
-        collector.issue(slot, perm, bounds[-1]), bounds[-1]))
+        collector.issue(slot, prep, len(bounds) - 1)))
     return _concat_parts(parts)
 
 
@@ -402,7 +503,11 @@ def sfpl_round(key, st, data, split, opt_c, opt_s, *, num_clients,
                                           batch_size, axis=1)
         y_pool = yb.reshape((n_pool,))
         perm = collector.make_perm(kperm, n_pool)
-        y_shuf = collector.permute(y_pool, perm)
+        # routing metadata built ONCE per step from the replicated perm;
+        # the label permute, activation permute, backward exchange, and
+        # (streamed) route_back all reuse it
+        prep = collector.prepare(perm, n_pool)
+        y_shuf = collector.permute(y_pool, prep)
         fwd = lambda cp, cs, x: split.client_fwd(cp, cs, x, True, None)
 
         def srv_loss_on(sp, a_shuf):
@@ -430,7 +535,7 @@ def sfpl_round(key, st, data, split, opt_c, opt_s, *, num_clients,
                 bn_parts.append(ncbn_g)
                 return A_g.reshape((-1,) + A_g.shape[2:])
 
-            a_shuf = streamed_shuffle(collector, perm, n_pool,
+            a_shuf = streamed_shuffle(collector, prep, n_pool,
                                       produce_group)
             A = _concat_parts(A_parts)
             ncbn = jax.tree_util.tree_map(
@@ -438,7 +543,7 @@ def sfpl_round(key, st, data, split, opt_c, opt_s, *, num_clients,
             (loss, nsbn), (g_sp, g_shuf) = jax.value_and_grad(
                 srv_loss_on, argnums=(0, 1), has_aux=True)(
                 st["sp"], a_shuf)
-            g_pool = collector.route_back(g_shuf, perm, n_pool)
+            g_pool = collector.route_back(g_shuf, prep, n_pool)
         else:
             # 1. client forward, parallel over the (possibly sharded)
             # client axis
@@ -450,10 +555,10 @@ def sfpl_round(key, st, data, split, opt_c, opt_s, *, num_clients,
 
             # 3. ONE server update on the shuffled stack. Differentiating
             # w.r.t. the PRE-shuffle pool makes autodiff emit the
-            # de-shuffle (dense scatter or inverse all_to_all): g_pool
-            # arrives already routed back to source clients.
+            # de-shuffle (dense scatter or the backward-plan exchange):
+            # g_pool arrives already routed back to source clients.
             def srv_loss(sp, a_pool):
-                return srv_loss_on(sp, collector.permute(a_pool, perm))
+                return srv_loss_on(sp, collector.permute(a_pool, prep))
             (loss, nsbn), (g_sp, g_pool) = jax.value_and_grad(
                 srv_loss, argnums=(0, 1), has_aux=True)(st["sp"], a_pool)
         sp_new, sopt_new = opt_s.update(g_sp, st["sopt"], st["sp"],

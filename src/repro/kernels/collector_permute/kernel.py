@@ -1,11 +1,21 @@
-"""Pallas-TPU kernel for the SFPL global-collector shuffle.
+"""Pallas-TPU kernels for the SFPL global-collector shuffle.
 
-The collector's shuffle/de-shuffle is a batched row gather over the pooled
-smashed-data tensor: ``out[i] = x[perm[i]]``. On TPU this is a one-pass
-HBM->VMEM->HBM copy when the permutation is prefetched to SMEM and used in
-the *BlockSpec index map* — each grid cell DMAs exactly its source tile, so
-no intermediate materialization or scatter is needed
-(PrefetchScalarGridSpec pattern).
+The collector's data movement is batched row gathers over the pooled
+smashed-data tensor. On TPU each is a one-pass HBM->VMEM->HBM copy when
+the gather indices are prefetched to SMEM and used in the *BlockSpec index
+map* — every grid cell DMAs exactly its source tile, so no intermediate
+materialization or scatter is needed (PrefetchScalarGridSpec pattern).
+
+Three gathers share the pattern:
+
+  * ``collector_permute_2d`` — the flat pool shuffle ``out[i] = x[perm[i]]``
+    (single-device collector, and the legacy local permute);
+  * ``bucket_permute_2d``    — the route-plan SEND side: gather local rows
+    directly into send-bucket layout, ``out[s*cap + r] = x[idx[s, r]]``,
+    via a TWO-LEVEL (destination bucket, slot) grid whose prefetched index
+    map resolves both levels;
+  * ``unbucket_permute_2d``  — its receive-side mirror: gather the flat
+    received bucket block into local output order.
 """
 from __future__ import annotations
 
@@ -42,3 +52,68 @@ def collector_permute_2d(x, perm, *, block_d=512, interpret=False):
         interpret=interpret,
         name="sfpl_collector_permute",
     )(perm.astype(jnp.int32), x)
+
+
+def bucket_permute_2d(x, idx, *, block_d=512, interpret=False):
+    """Route-plan send-side gather into bucket layout.
+
+    x: (R, D) local rows; idx: (S, cap) int32 — the plan's two-level
+    (destination shard, bucket slot) -> source row map (``RoutePlan.
+    send_idx`` reshaped). Returns (S*cap, D) with
+    ``out[s*cap + r] = x[idx[s, r]]`` — the exact send buffer the
+    ``all_to_all`` ships, written in one pass: the grid iterates buckets
+    then slots, and the prefetched index map resolves both levels to the
+    source tile, so rows stream HBM->HBM without an intermediate
+    sorted/stacked copy."""
+    R, D = x.shape
+    S, cap = idx.shape
+    assert D % block_d == 0, (D, block_d)
+    grid = (S, cap, D // block_d)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_d),
+                         lambda s, r, j, idx: (idx[s, r], j)),
+        ],
+        out_specs=pl.BlockSpec((1, block_d),
+                               lambda s, r, j, idx: (s * cap + r, j)),
+    )
+    return pl.pallas_call(
+        _permute_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((S * cap, D), x.dtype),
+        interpret=interpret,
+        name="sfpl_bucket_permute",
+    )(idx.astype(jnp.int32), x)
+
+
+def unbucket_permute_2d(x, idx, *, block_d=512, interpret=False):
+    """Route-plan receive-side mirror of ``bucket_permute_2d``.
+
+    x: (R, D) flat received bucket block (``S*cap`` rows, plus the zero
+    pad row on slack-buffered plans); idx: (B,) int32 — the plan's
+    ``recv_idx``: local output row -> flat (source shard, slot). Returns
+    (B, D) with ``out[i] = x[idx[i]]`` — the shuffled output slab, again
+    one DMA per tile with no scatter."""
+    R, D = x.shape
+    (B,) = idx.shape
+    assert D % block_d == 0, (D, block_d)
+    grid = (B, D // block_d)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_d), lambda i, j, idx: (idx[i], j)),
+        ],
+        out_specs=pl.BlockSpec((1, block_d), lambda i, j, idx: (i, j)),
+    )
+    return pl.pallas_call(
+        _permute_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, D), x.dtype),
+        interpret=interpret,
+        name="sfpl_unbucket_permute",
+    )(idx.astype(jnp.int32), x)

@@ -1,4 +1,4 @@
-"""jit'd wrapper for the collector permutation kernel."""
+"""jit'd wrappers for the collector permutation / bucket gather kernels."""
 from __future__ import annotations
 
 import functools
@@ -6,12 +6,13 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.collector_permute.kernel import collector_permute_2d
+from repro.kernels.collector_permute.kernel import (
+    bucket_permute_2d, collector_permute_2d, unbucket_permute_2d)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def collector_permute(x, perm, *, interpret=False):
-    """x: (R, ...) smashed-data stack; perm: (R,). Returns x[perm]."""
+def _flatten_features(x):
+    """(R, ...) -> (R, Dp) with the feature dims flattened and padded to a
+    TPU-friendly lane multiple; returns (x2, d, dp, block_d, feat_shape)."""
     orig_shape = x.shape
     R = orig_shape[0]
     d = 1
@@ -22,8 +23,35 @@ def collector_permute(x, perm, *, interpret=False):
     if dp != d:
         x2 = jnp.pad(x2, ((0, 0), (0, dp - d)))
     block_d = dp if dp <= 512 else 512 if dp % 512 == 0 else 128
+    return x2, d, dp, block_d, orig_shape[1:]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def collector_permute(x, perm, *, interpret=False):
+    """x: (R, ...) smashed-data stack; perm: (R,). Returns x[perm]."""
+    x2, d, _, block_d, feat = _flatten_features(x)
     y = collector_permute_2d(x2, perm, block_d=block_d, interpret=interpret)
-    return y[:, :d].reshape(orig_shape)
+    return y[:, :d].reshape((x.shape[0],) + feat)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bucket_permute(x, idx, *, interpret=False):
+    """Route-plan send gather: x: (R, ...) local rows, idx: (S, cap) the
+    two-level (destination bucket, slot) -> source row map. Returns the
+    (S*cap, ...) send buffer ``out[s*cap + r] = x[idx[s, r]]``."""
+    x2, d, _, block_d, feat = _flatten_features(x)
+    y = bucket_permute_2d(x2, idx, block_d=block_d, interpret=interpret)
+    return y[:, :d].reshape((idx.shape[0] * idx.shape[1],) + feat)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def unbucket_permute(x, idx, *, interpret=False):
+    """Route-plan receive gather (the ``bucket_permute`` mirror): x:
+    (R, ...) flat received block, idx: (B,) output row -> flat slot.
+    Returns the (B, ...) shuffled slab ``out[i] = x[idx[i]]``."""
+    x2, d, _, block_d, feat = _flatten_features(x)
+    y = unbucket_permute_2d(x2, idx, block_d=block_d, interpret=interpret)
+    return y[:, :d].reshape((idx.shape[0],) + feat)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(2,))

@@ -1,7 +1,17 @@
-"""Pure-jnp oracle for the SFPL collector permutation (batched row gather)."""
+"""Pure-jnp oracles for the SFPL collector gathers (batched row gathers)."""
 from __future__ import annotations
 
 
 def permute_ref(x, perm):
     """x: (R, d) pooled smashed data; perm: (R,) int32. out[i] = x[perm[i]]."""
     return x[perm]
+
+
+def bucket_permute_ref(x, idx):
+    """x: (R, d); idx: (S, cap). out[s*cap + r] = x[idx[s, r]]."""
+    return x[idx.reshape(-1)]
+
+
+def unbucket_permute_ref(x, idx):
+    """x: (R, d) flat received block; idx: (B,). out[i] = x[idx[i]]."""
+    return x[idx]

@@ -61,8 +61,8 @@ def evaluate_lm(spec, cfg, params, *, batches=8, batch=8, seq=64, seed=0):
 
 
 def evaluate_paper(*, num_clients=8, epochs=4, batch_size=8, sharded=False,
-                   alpha=1.0, pipeline="sync", depth=8, width=8, hw=8,
-                   lr=0.05, seed=0):
+                   alpha=1.0, pipeline="sync", use_kernel=None, depth=8,
+                   width=8, hw=8, lr=0.05, seed=0):
     """Train SFPL and SFLv2 through the unified round engine on the same
     data, fleet size, and placement; return accuracy under BOTH test
     protocols (IID and non-IID batches) per scheme, so the head-to-head
@@ -100,7 +100,7 @@ def evaluate_paper(*, num_clients=8, epochs=4, batch_size=8, sharded=False,
                     split, opt, opt, ED.shard_client_data(data, mesh),
                     mesh=mesh, num_clients=num_clients,
                     batch_size=batch_size, alpha=alpha,
-                    collector_pipeline=pipeline)
+                    collector_pipeline=pipeline, use_kernel=use_kernel)
             else:
                 epoch = ED.make_sflv2_epoch_sharded(
                     split, opt, opt, data, mesh=mesh,
@@ -146,11 +146,18 @@ def main():
                     choices=("sync", "double_buffered"),
                     help="sharded SFPL collector pipeline (with --paper "
                          "--sharded)")
+    ap.add_argument("--use-kernel", dest="use_kernel", action="store_true",
+                    default=None,
+                    help="force the Pallas collector bucket kernels on "
+                         "(default: auto — on when the backend is TPU)")
+    ap.add_argument("--no-kernel", dest="use_kernel", action="store_false",
+                    help="force the Pallas collector bucket kernels off")
     args = ap.parse_args()
     if args.paper:
         rep = evaluate_paper(num_clients=args.clients, epochs=args.epochs,
                              sharded=args.sharded, alpha=args.alpha,
-                             pipeline=args.pipeline)
+                             pipeline=args.pipeline,
+                             use_kernel=args.use_kernel)
         chance = 100.0 / args.clients
         print(f"matched fleet ({args.clients} clients, "
               f"sharded={args.sharded}, chance {chance:.1f}%):")

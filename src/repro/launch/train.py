@@ -14,9 +14,11 @@ Two modes:
     ``--alpha``; SFLv2: the server stream sharded over the batch axis).
     ``--pipeline double_buffered`` streams the collector: each flush
     group's exchange overlaps the next group's client forward (see
-    docs/collector_modes.md). ``--use-kernel`` routes the local permute
-    through the Pallas collector kernel. To simulate a mesh on CPU, set
-    XLA_FLAGS=--xla_force_host_platform_device_count=8 before launching.
+    docs/collector_modes.md). The exchange's local bucket gathers run
+    through the Pallas collector kernels automatically on TPU
+    (``--use-kernel`` / ``--no-kernel`` force the choice). To simulate a
+    mesh on CPU, set XLA_FLAGS=--xla_force_host_platform_device_count=8
+    before launching.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.train --arch qwen3-8b --smoke \
@@ -83,7 +85,7 @@ def train_lm(arch_id, *, steps=50, batch=8, seq=64, smoke=True, sfpl=False,
 
 
 def train_paper(*, num_clients=8, epochs=4, batch_size=8, sharded=False,
-                use_kernel=False, depth=8, width=8, hw=8, lr=0.05,
+                use_kernel=None, depth=8, width=8, hw=8, lr=0.05,
                 scheme="sfpl", alpha=1.0, collector="balanced",
                 pipeline="sync", log_every=1):
     """DCML rounds on synthetic CIFAR, one client per class (only positive
@@ -179,8 +181,12 @@ def main():
                     help="SFPL round engine on synthetic CIFAR")
     ap.add_argument("--sharded", action="store_true",
                     help="mesh-sharded engine (with --paper)")
-    ap.add_argument("--use-kernel", action="store_true",
-                    help="Pallas collector permute on the sharded path")
+    ap.add_argument("--use-kernel", dest="use_kernel", action="store_true",
+                    default=None,
+                    help="force the Pallas collector bucket kernels on "
+                         "(default: auto — on when the backend is TPU)")
+    ap.add_argument("--no-kernel", dest="use_kernel", action="store_false",
+                    help="force the Pallas collector bucket kernels off")
     ap.add_argument("--scheme", default="sfpl", choices=("sfpl", "sflv2"),
                     help="paper mode: DCML scheme to run")
     ap.add_argument("--alpha", type=float, default=1.0,
