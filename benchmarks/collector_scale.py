@@ -16,17 +16,22 @@ also carries per-phase timings (perm build / route-plan build / plan
 exchange / server update) so the CPU-harness overhead can be localized;
 a phase timer that never fired is a hard error, never a silent zero.
 
-Every config is swept in BOTH collector pipelines — ``sync`` (one
-blocking exchange per step) and ``double_buffered`` (per-flush-group
-exchanges overlapping the next group's client forward) — and the phases
-are timed PER PIPELINE with that pipeline's own exchange machinery
-(sync: one dense plan exchange over the pool; double_buffered: the
-per-group issue/complete exchanges back to back), so the two records of
-a config never share a phases dict. Each ``double_buffered`` record
-carries ``overlap_savings``, the fraction of the sync epoch the streamed
-epoch saved (negative on this CPU harness means the pipeline's extra
-buffer traffic outweighed the overlap, the expected outcome without real
-async collectives).
+Every config is swept in THREE collector pipelines — ``sync`` (one
+blocking exchange per step), ``double_buffered`` (per-flush-group
+whole-mesh exchanges overlapping the next group's client forward, the
+capacity-safe ``b_g + 1`` buffers), and ``submesh`` (the same streamed
+pipeline with each group's exchange a DENSE zero-slack collective
+confined to its owning shard slice; recorded only when the layout
+qualifies, with ``plan_groups``/``slice_size`` and per-group
+``plan_build_g{i}_s`` phases) — and the phases are timed PER PIPELINE
+with that pipeline's own exchange machinery (sync: one dense plan
+exchange over the pool; double_buffered: the per-group issue/complete
+exchanges back to back; submesh: the slice-confined per-group
+collectives at the sweep alpha), so the records of a config never share
+a phases dict. Each streamed record carries ``overlap_savings``, the
+fraction of the sync epoch the streamed epoch saved (negative on this
+CPU harness means the pipeline's extra buffer traffic outweighed the
+overlap — the gap the sub-mesh record exists to close).
 
 Run:  PYTHONPATH=src python benchmarks/collector_scale.py \
           [--epochs 2] [--alpha 0.5] [--out BENCH_collector.json] \
@@ -132,10 +137,12 @@ def bench_phases(data_sh, split, opt, st_sh, mesh, num_clients, batch_size,
     collector strategy: ``sync`` exchanges the whole pool with one dense
     plan exchange, ``double_buffered`` with its capacity-safe
     issue/complete halves (no client compute interleaved — the exchange
-    cost alone). The microbench pins ONE GLOBAL FLUSH so the exchange
-    numbers stay comparable across bench alphas and releases; the
-    ``alpha`` flush structure shows up in the epoch timings."""
-    del alpha  # phases microbench: one global flush (see docstring)
+    cost alone), ``submesh`` with the dense slice-confined per-group
+    exchanges AT THE SWEEP ALPHA (a single global flush has no slice
+    structure to measure) plus per-group ``plan_build_g{i}_s`` timings.
+    The sync/double_buffered microbenches pin ONE GLOBAL FLUSH so the
+    exchange numbers stay comparable across bench alphas and releases;
+    the ``alpha`` flush structure shows up in the epoch timings."""
     n_pool = num_clients * batch_size
     xb = jax.lax.dynamic_slice_in_dim(data_sh["x"], 0, batch_size, axis=1)
     A, _ = jax.jit(jax.vmap(
@@ -145,18 +152,50 @@ def bench_phases(data_sh, split, opt, st_sh, mesh, num_clients, batch_size,
     y_pool = jax.lax.dynamic_slice_in_dim(
         data_sh["y"], 0, batch_size, axis=1).reshape((n_pool,))
     key = jax.random.PRNGKey(2)
-    timers = PhaseTimers(("perm_build_s", "plan_build_s", "exchange_s",
-                          "server_update_s"))
+    required = ["perm_build_s", "plan_build_s", "exchange_s",
+                "server_update_s"]
 
-    coll = RD.DataMesh(mesh).collector(
-        num_clients, alpha=1.0, use_kernel=use_kernel, pipeline=pipeline)
+    if pipeline == "submesh":
+        coll = RD.DataMesh(mesh).collector(
+            num_clients, alpha=alpha, use_kernel=use_kernel,
+            pipeline="double_buffered", submesh=True)
+        n_groups = len(coll.group_bounds(n_pool))
+        required += [f"plan_build_g{g}_s" for g in range(n_groups)]
+    else:
+        # phases microbench: one global flush (see docstring). The
+        # double_buffered leg pins submesh OFF — a single global flush
+        # qualifies trivially for sub-mesh routing (the slice is the whole
+        # mesh), and auto-enabling it here would silently swap the
+        # whole-mesh fallback buffers this record exists to measure
+        coll = RD.DataMesh(mesh).collector(
+            num_clients, alpha=1.0, use_kernel=use_kernel,
+            pipeline=pipeline,
+            submesh=False if pipeline == "double_buffered" else None)
+    timers = PhaseTimers(required)
+
     perm_fn = jax.jit(lambda k: coll.make_perm(k, n_pool))
     perm = timers.time("perm_build_s", perm_fn, key)
 
     prep_fn = jax.jit(lambda p: coll.prepare(p, n_pool))
     prep = timers.time("plan_build_s", prep_fn, perm)
 
-    if pipeline == "double_buffered":
+    if pipeline == "submesh":
+        # per-group dense plan builds: the cost the sub-mesh path adds
+        # over one whole-pool plan (each group's (fwd, bwd) pair alone)
+        from repro.core.collector_dist import build_submesh_route_plans
+        slices = coll.submesh_slices(n_pool)
+        n_shards = SHARDS
+        for g, (r0, r1) in enumerate(coll.group_bounds(n_pool)):
+            sub = jax.lax.slice_in_dim(perm, r0, r1, axis=0) - r0
+            timers.time(
+                f"plan_build_g{g}_s",
+                jax.jit(lambda s, g=g: build_submesh_route_plans(
+                    s, g, n_shards, slices)), sub)
+
+    if pipeline in ("double_buffered", "submesh"):
+        # produce_group returns the whole pool in both streamed legs:
+        # double_buffered is pinned to one global flush (the group IS the
+        # pool) and sub-mesh plans take pool-width rows by contract
         def exchange(a, prep):
             return RD.streamed_shuffle(coll, prep, n_pool, lambda g: a)
     else:
@@ -200,22 +239,44 @@ def bench_config(num_clients, batch_size, *, epochs, use_kernel, alpha):
         return ED.shard_dcml_state(
             jax.tree_util.tree_map(jnp.asarray, st0_host), mesh)
 
+    from repro.core import collector as C
+    from repro.core.collector_dist import submesh_slice_size
+    n_pool = num_clients * batch_size
+    group_rows = [c * batch_size
+                  for c in C.flush_group_sizes(num_clients, alpha)]
+    pipelines = ["sync", "double_buffered"]
+    if submesh_slice_size(n_pool, SHARDS, group_rows) is not None:
+        pipelines.append("submesh")
+    else:
+        print(f"N={num_clients:3d} B={batch_size:3d} alpha={alpha}: "
+              f"layout does not qualify for sub-mesh routing — no "
+              f"submesh record", flush=True)
+
     records = []
-    for pipeline in ("sync", "double_buffered"):
+    for pipeline in pipelines:
         phases = bench_phases(data_sh, split, opt, fresh_sharded(), mesh,
                               num_clients, batch_size,
                               use_kernel=use_kernel, alpha=alpha,
                               pipeline=pipeline)
+        # the double_buffered record stays the whole-mesh fallback
+        # (submesh=False) so it keeps measuring the b_g + 1 buffers the
+        # submesh record is compared against
+        pipe_kw = {"sync": dict(collector_pipeline="sync"),
+                   "double_buffered": dict(
+                       collector_pipeline="double_buffered",
+                       collector_submesh=False),
+                   "submesh": dict(collector_pipeline="double_buffered",
+                                   collector_submesh=True)}[pipeline]
         sharded = ED.make_sfpl_epoch_sharded(
             split, opt, opt, data_sh, mesh=mesh, num_clients=num_clients,
             batch_size=batch_size, use_kernel=use_kernel, alpha=alpha,
-            collector_pipeline=pipeline)
+            **pipe_kw)
         t_sharded, l_sharded = time_epochs(sharded, key, fresh_sharded(),
                                            epochs)
         rec = {
             "num_clients": num_clients,
             "batch_size": batch_size,
-            "pooled_batch": num_clients * batch_size,
+            "pooled_batch": n_pool,
             "shards": SHARDS,
             "use_kernel": use_kernel,
             "alpha": alpha,
@@ -227,6 +288,10 @@ def bench_config(num_clients, batch_size, *, epochs, use_kernel, alpha):
             "max_loss_delta": float(np.abs(l_single - l_sharded).max()),
             "phases": phases,
         }
+        if pipeline == "submesh":
+            rec["plan_groups"] = len(group_rows)
+            rec["slice_size"] = submesh_slice_size(n_pool, SHARDS,
+                                                   group_rows)
         print(f"N={num_clients:3d} B={batch_size:3d} "
               f"pooled={rec['pooled_batch']:4d} {pipeline:15s}  "
               f"single {t_single:.3f}s  sharded {t_sharded:.3f}s  "
@@ -237,13 +302,15 @@ def bench_config(num_clients, batch_size, *, epochs, use_kernel, alpha):
               f"{phases['server_update_s']*1e3:.1f}ms]", flush=True)
         records.append(rec)
 
-    rec_sync, rec_db = records
-    # fraction of the sync sharded epoch the streamed epoch saved
-    rec_db["overlap_savings"] = (
-        1.0 - rec_db["sec_per_epoch_sharded"]
-        / rec_sync["sec_per_epoch_sharded"])
-    print(f"N={num_clients:3d} B={batch_size:3d} overlap_savings "
-          f"{rec_db['overlap_savings']*100:+.1f}%", flush=True)
+    rec_sync = records[0]
+    # fraction of the sync sharded epoch each streamed epoch saved
+    for rec in records[1:]:
+        rec["overlap_savings"] = (
+            1.0 - rec["sec_per_epoch_sharded"]
+            / rec_sync["sec_per_epoch_sharded"])
+        print(f"N={num_clients:3d} B={batch_size:3d} "
+              f"{rec['pipeline']} overlap_savings "
+              f"{rec['overlap_savings']*100:+.1f}%", flush=True)
     return records
 
 

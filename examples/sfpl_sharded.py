@@ -9,9 +9,10 @@ with the inverse permutation, supplied by autodiff. The run finishes by
 checking the loss trajectory against the single-device engine — including
 a partial-flush round (``alpha=0.5``: per-flush-group balanced exchanges
 aligned to shard boundaries), the paper-faithful uniform collector mode
-with auto-sized slack, and the double-buffered streaming pipeline
+with auto-sized slack, the double-buffered streaming pipeline
 (per-group issue/complete exchanges overlapping the next group's client
-forward).
+forward), and sub-mesh streaming (each flush group's all_to_all scoped
+to the shard slice owning its rows, with dense zero-slack plans).
 
 Run:  PYTHONPATH=src python examples/sfpl_sharded.py
 """
@@ -87,7 +88,14 @@ def main():
             # the final in-flight group is drained after the loop — the
             # trajectory still tracks the single-device oracle
             ({"alpha": 0.5, "collector_pipeline": "double_buffered"},
-             "alpha=0.5 streamed")):
+             "alpha=0.5 streamed"),
+            # sub-mesh streaming, required rather than auto-detected:
+            # each 32-row flush group's all_to_all runs only over its
+            # own 4-shard slice, with slice-local DENSE plans (exact
+            # capacity, zero slack padding)
+            ({"alpha": 0.5, "collector_pipeline": "double_buffered",
+              "collector_submesh": True},
+             "alpha=0.5 sub-mesh streamed")):
         ep_m = ED.make_sfpl_epoch_sharded(
             split, opt, opt, data_sh, mesh=mesh, num_clients=V,
             batch_size=8, check_capacity=True, **mode_kw)

@@ -57,6 +57,19 @@ places the received rows. The slot carries its plan, and the whole shuffle
 keeps the inverse-permutation routing: the backward pass is one more
 issue/complete exchange with the plan built from the inverse permutation.
 
+Sub-mesh streaming: when the grouped layout QUALIFIES — every flush group
+covers the same number ``S`` of whole shard slabs, with ``b % S == 0``
+(``submesh_slice_size``) — the streaming path recovers the dense fast path
+too. Group ``g``'s rows live exactly on shards ``[g*S, (g+1)*S)``, so its
+exchange never needs the rest of the mesh: ``build_submesh_route_plans``
+builds a DENSE per-group plan (``may_drop=False``, cap exactly ``b/S``,
+no overflow counter, no pad row) whose collective is one ``all_to_all``
+restricted to the owning shard slice via ``axis_index_groups``
+(``submesh_axis_groups``). The plan's index arrays keep the full-mesh
+``(n_shards, b)`` shape so the exchange still runs as ONE pool-width
+shard_map — shards outside the slice exchange zero-index garbage within
+their own slice and their output rows are masked off by the caller.
+
 Shape/layout contract (all entry points):
 
   * ``x``: ``(N, ...)`` with dim 0 sharded into ``n_shards`` equal
@@ -200,6 +213,46 @@ def exact_pair_cap(n, num_shards, group_sizes=None):
                for size in sizes)
 
 
+def submesh_slice_size(n, n_shards, group_sizes):
+    """Shards per owning slice when the grouped layout qualifies for the
+    sub-mesh streaming exchange, else ``None``.
+
+    Qualifies iff every flush group covers the SAME number ``S`` of whole
+    ``b = n // n_shards``-row shard slabs (so contiguous groups partition
+    the mesh axis into equal slices, group ``g`` owning shards
+    ``[g*S, (g+1)*S)``) and ``b % S == 0`` (the balanced sub-permutation
+    exchanges exactly ``b/S`` rows per in-slice shard pair — the dense,
+    zero-slack capacity). One global flush qualifies trivially with the
+    slice being the whole mesh.
+
+    >>> submesh_slice_size(64, 8, [16, 16, 16, 16])   # S_g = 2 per group
+    2
+    >>> submesh_slice_size(64, 8, [64])               # one global flush
+    8
+    >>> submesh_slice_size(64, 8, [32, 16, 16]) is None  # unequal spans
+    True
+    """
+    b = n // n_shards
+    sizes = list(group_sizes) if group_sizes else [n]
+    if any(size % b for size in sizes):
+        return None                     # a group straddles a slab boundary
+    spans = {size // b for size in sizes}
+    if len(spans) != 1:
+        return None                     # axis_index_groups need equal sizes
+    slice_size = spans.pop()
+    if b % slice_size or n_shards % slice_size:
+        return None
+    return slice_size
+
+
+def submesh_axis_groups(n_shards, slice_size):
+    """``axis_index_groups`` partitioning the mesh axis into contiguous
+    ``slice_size``-shard slices — each flush group's ``all_to_all`` runs
+    only within its owning slice."""
+    return [list(range(j, j + slice_size))
+            for j in range(0, n_shards, slice_size)]
+
+
 @functools.lru_cache(maxsize=None)
 def _uniform_auto_slack_cached(n, num_shards, group_sizes, probes, seed,
                                margin):
@@ -312,8 +365,12 @@ class RoutePlan:
         whose loads are deterministic.
 
     Static metadata: ``n`` (global rows), ``n_shards``, ``cap`` (bucket
-    rows per shard pair), ``may_drop``. ``dense`` means the send buffer
-    has zero slack padding: ``n_shards * cap == b`` with drops impossible.
+    rows per shard pair), ``may_drop``. ``slice_size`` is ``None`` for a
+    whole-mesh exchange; a sub-mesh plan (``build_submesh_route_plans``)
+    sets it to the owning slice's shard count ``S`` and the collective
+    runs under ``axis_index_groups`` of that width. ``dense`` means the
+    send buffer has zero slack padding: the participating shard count
+    times ``cap`` equals the ``b``-row slab, with drops impossible.
     """
     send_idx: jax.Array
     recv_idx: jax.Array
@@ -322,16 +379,18 @@ class RoutePlan:
     n_shards: int
     cap: int
     may_drop: bool
+    slice_size: Optional[int] = None
 
     @property
     def dense(self):
+        shards = self.slice_size or self.n_shards
         return (not self.may_drop
-                and self.n_shards * self.cap == self.n // self.n_shards)
+                and shards * self.cap == self.n // self.n_shards)
 
 
 jax.tree_util.register_dataclass(
     RoutePlan, data_fields=["send_idx", "recv_idx", "overflow"],
-    meta_fields=["n", "n_shards", "cap", "may_drop"])
+    meta_fields=["n", "n_shards", "cap", "may_drop", "slice_size"])
 
 
 def inverse_permutation_scatter(perm):
@@ -405,6 +464,47 @@ def build_route_plans(perm, n_shards, *, cap, may_drop=True):
     return fwd, bwd
 
 
+def _embed_slice_plan(plan, slice_index, n_shards):
+    """Embed a slice-local dense plan (built over ``S = plan.n_shards``
+    shards) into full-mesh-shaped ``(n_shards, b)`` index arrays at rows
+    ``[slice_index * S, (slice_index + 1) * S)``. Shards outside the slice
+    keep zero indices: within their own slice's collective they gather and
+    scatter garbage whose output rows the caller masks off."""
+    slice_size = plan.n_shards
+    b = plan.recv_idx.shape[1]
+    j0 = slice_index * slice_size
+    embed = lambda idx: jnp.zeros((n_shards, b), jnp.int32).at[
+        j0:j0 + slice_size].set(idx)
+    return RoutePlan(embed(plan.send_idx), embed(plan.recv_idx), None,
+                     n_shards * b, n_shards, plan.cap, False,
+                     slice_size=slice_size)
+
+
+def build_submesh_route_plans(sub_perm, slice_index, n_shards, slice_size):
+    """(forward, backward) DENSE plans of flush group ``slice_index``'s
+    sub-permutation, routed only over the group's owning ``slice_size``-
+    shard slice (sub-mesh streaming — the layout must satisfy
+    ``submesh_slice_size``).
+
+    ``sub_perm`` is the group's ``(n_g,)`` permutation in group-local
+    coordinates (``n_g = slice_size * b``). The slice-local exchange is
+    built exactly like the whole-mesh dense path — exact per-pair capacity
+    ``b / slice_size``, ``may_drop=False``, no overflow counter, no pad
+    row — then embedded into full-mesh-shaped index arrays so the exchange
+    runs as one pool-width shard_map whose collective carries
+    ``axis_index_groups`` of the slice width. Both plans share one O(n_g)
+    scatter inverse, exactly like ``build_route_plans``."""
+    sub_perm = sub_perm.astype(jnp.int32)
+    n_g = sub_perm.shape[0]
+    b = n_g // slice_size
+    cap = b // slice_size
+    inv = inverse_permutation_scatter(sub_perm)
+    fwd = _build_one_plan(inv, slice_size, cap, False)
+    bwd = _build_one_plan(sub_perm, slice_size, cap, False)
+    return (_embed_slice_plan(fwd, slice_index, n_shards),
+            _embed_slice_plan(bwd, slice_index, n_shards))
+
+
 # --------------------------------------------------------------------------
 # plan-driven exchange: gather -> ONE all_to_all -> gather
 
@@ -439,6 +539,17 @@ def _gather_rows(x, idx, *, use_kernel, bucket_shape=None):
     return x[idx]
 
 
+def _plan_exchange_spec(plan):
+    """(bucket shard count, cap, axis_index_groups) of a plan's collective:
+    whole-mesh plans exchange ``(n_shards, cap)`` buckets over the full
+    axis; sub-mesh plans exchange ``(slice_size, cap)`` buckets under
+    ``axis_index_groups`` confining each collective to its owning slice."""
+    if plan.slice_size is None:
+        return plan.n_shards, plan.cap, None
+    return (plan.slice_size, plan.cap,
+            submesh_axis_groups(plan.n_shards, plan.slice_size))
+
+
 def plan_exchange(x, plan, *, mesh, axis="data", use_kernel=False,
                   check_capacity=False):
     """One full exchange under a route plan: bucket-gather this shard's
@@ -452,8 +563,13 @@ def plan_exchange(x, plan, *, mesh, axis="data", use_kernel=False,
     the collective in one shard_map region (one SPMD program, no sharded
     bucket intermediate crossing a shard_map boundary); the split halves
     exist so the streaming pipeline can put compute between them.
-    tests/test_streaming.py pins the composition row-for-row equal."""
-    S, cap = plan.n_shards, plan.cap
+    tests/test_streaming.py pins the composition row-for-row equal.
+
+    A sub-mesh plan (``plan.slice_size = S``) exchanges ``(S, cap)``
+    buckets under ``axis_index_groups`` of the slice width instead —
+    on a pool-width input only the owning slice's output rows are
+    meaningful; the caller masks the rest."""
+    S, cap, groups = _plan_exchange_spec(plan)
     check = check_capacity and plan.overflow is not None
 
     def local(x_loc, send_idx, recv_idx, *overflow):
@@ -466,7 +582,7 @@ def plan_exchange(x, plan, *, mesh, axis="data", use_kernel=False,
                               bucket_shape=(S, cap))
         recv = jax.lax.all_to_all(
             bucket.reshape((S, cap) + x_loc.shape[1:]), axis, 0, 0,
-            tiled=False)
+            tiled=False, axis_index_groups=groups)
         flat = recv.reshape((S * cap,) + x_loc.shape[1:])
         if plan.may_drop:
             flat = jnp.concatenate(
@@ -493,8 +609,9 @@ def plan_exchange_issue(x, plan, *, mesh, axis="data", use_kernel=False,
     the plan. Nothing about the slot depends on later compute, so a
     scheduler is free to overlap the collective with whatever runs between
     ``issue`` and ``complete`` — the hook the double-buffered streaming
-    collector pipelines client forwards into."""
-    S, cap = plan.n_shards, plan.cap
+    collector pipelines client forwards into. A sub-mesh plan's collective
+    runs under ``axis_index_groups`` of the owning slice's width."""
+    S, cap, groups = _plan_exchange_spec(plan)
     check = check_capacity and plan.overflow is not None
 
     def local(x_loc, send_idx, *overflow):
@@ -504,7 +621,7 @@ def plan_exchange_issue(x, plan, *, mesh, axis="data", use_kernel=False,
                               bucket_shape=(S, cap))
         return jax.lax.all_to_all(
             bucket.reshape((S, cap) + x_loc.shape[1:]), axis, 0, 0,
-            tiled=False)
+            tiled=False, axis_index_groups=groups)
 
     issue = _shard_map_maybe_norep(
         local, mesh=mesh,
@@ -518,7 +635,7 @@ def plan_exchange_complete(slot, *, mesh, axis="data", use_kernel=False):
     """Second (complete) half: gather the received bucket block of a
     ``plan_exchange_issue`` slot into local output order."""
     recv, plan = slot
-    S, cap = plan.n_shards, plan.cap
+    S, cap, _ = _plan_exchange_spec(plan)
 
     def local(recv, recv_idx):
         flat = recv.reshape((S * cap,) + recv.shape[2:])

@@ -44,7 +44,8 @@ import jax
 
 from repro.core import collector as C
 from repro.core import round as RD
-from repro.core.collector_dist import group_fits_slabs, mesh_axis_size
+from repro.core.collector_dist import (group_fits_slabs, mesh_axis_size,
+                                       submesh_slice_size)
 from repro.core.engine import SplitModel, make_client_update  # noqa: F401
 
 
@@ -68,7 +69,8 @@ def shard_client_data(data, mesh, *, axis="data"):
 
 def check_sfpl_layout(num_clients, batch_size, n_shards, *, alpha=1.0,
                       collector_mode="balanced",
-                      collector_pipeline="sync"):
+                      collector_pipeline="sync",
+                      collector_submesh=None):
     """Eager validation of the sharded SFPL layout; raises ValueError with
     an actionable message before any device work.
 
@@ -81,7 +83,12 @@ def check_sfpl_layout(num_clients, batch_size, n_shards, *, alpha=1.0,
     its slack is probed from the actual flush-group structure. The
     ``double_buffered`` pipeline additionally needs every flush group's
     row count divisible by the shard count (each group is row-sharded
-    over the whole mesh for its own issue/complete exchange).
+    over the whole mesh for its own issue/complete exchange) — UNLESS
+    the layout qualifies for sub-mesh routing (``collector_submesh`` not
+    ``False``, balanced mode, ``collector_dist.submesh_slice_size``),
+    where each group's exchange is confined to its owning shard slice and
+    the whole-mesh divisibility is moot. ``collector_submesh=True``
+    demands qualification and raises otherwise.
 
     Returns the flush-group row counts of the accepted layout:
 
@@ -89,6 +96,9 @@ def check_sfpl_layout(num_clients, batch_size, n_shards, *, alpha=1.0,
     [64]
     >>> check_sfpl_layout(8, 8, 8, alpha=0.5)
     [32, 32]
+    >>> check_sfpl_layout(8, 8, 8, alpha=0.25, collector_submesh=True,
+    ...                   collector_pipeline="double_buffered")
+    [16, 16, 16, 16]
     """
     if num_clients % n_shards:
         raise ValueError(
@@ -99,12 +109,25 @@ def check_sfpl_layout(num_clients, batch_size, n_shards, *, alpha=1.0,
     rows = [c * batch_size
             for c in C.flush_group_sizes(num_clients, alpha)]
     if collector_pipeline == "double_buffered":
+        sub_ok = (collector_submesh is not False
+                  and collector_mode == "balanced"
+                  and submesh_slice_size(n_pool, n_shards, rows)
+                  is not None)
+        if collector_submesh and not sub_ok:
+            raise ValueError(
+                f"collector_submesh=True needs collector_mode='balanced' "
+                f"and every flush group covering the same number of whole "
+                f"shard slabs, with the slab divisible by that span; got "
+                f"mode={collector_mode!r}, group sizes {rows} over "
+                f"{n_shards} shards (num_clients={num_clients}, "
+                f"batch_size={batch_size}, alpha={alpha})")
         bad = [size for size in rows if size % n_shards]
-        if bad:
+        if bad and not sub_ok:
             raise ValueError(
                 f"double_buffered collector needs every flush group's row "
                 f"count divisible by the {n_shards} shards (each group is "
-                f"row-sharded over the whole mesh for its own exchange); "
+                f"row-sharded over the whole mesh for its own exchange), "
+                f"or a balanced layout qualifying for sub-mesh routing; "
                 f"got group sizes {rows} (num_clients={num_clients}, "
                 f"batch_size={batch_size}, alpha={alpha})")
     if collector_mode != "balanced":
@@ -133,7 +156,7 @@ def check_sfpl_layout(num_clients, batch_size, n_shards, *, alpha=1.0,
 
 def fit_shards(num_clients, batch_size, *, scheme="sfpl", alpha=1.0,
                collector_mode="balanced", collector_pipeline="sync",
-               max_shards=None):
+               collector_submesh=None, max_shards=None):
     """Largest shard count (up to the visible devices) the layout supports
     — shared by the launch drivers so every entrypoint degrades to a
     smaller mesh instead of crashing on indivisible configurations."""
@@ -146,7 +169,8 @@ def fit_shards(num_clients, batch_size, *, scheme="sfpl", alpha=1.0,
         try:
             check_sfpl_layout(num_clients, batch_size, s, alpha=alpha,
                               collector_mode=collector_mode,
-                              collector_pipeline=collector_pipeline)
+                              collector_pipeline=collector_pipeline,
+                              collector_submesh=collector_submesh)
             return s
         except ValueError:
             continue
@@ -158,7 +182,8 @@ def sfpl_epoch_sharded(key, st, data, split: SplitModel, opt_c, opt_s, *,
                        alpha=1.0, use_kernel=None, slack=None,
                        check_capacity=False, axis="data",
                        collector_mode="balanced",
-                       collector_pipeline="sync", stream_slack=None):
+                       collector_pipeline="sync", stream_slack=None,
+                       collector_submesh=None):
     """Drop-in sharded replacement for ``engine.sfpl_epoch``.
 
     Shape/layout contract: ``st`` is an ``init_dcml_state`` tree placed by
@@ -177,9 +202,16 @@ def sfpl_epoch_sharded(key, st, data, split: SplitModel, opt_c, opt_s, *,
     flush group's all_to_all is issued while the next group's client
     forward computes (``RD.StreamingAllToAll``), with the final in-flight
     group drained after the loop; ``"sync"`` (default) is the blocking
-    single-exchange parity oracle. ``stream_slack`` overrides the
-    streaming pipeline's per-group buffer sizing (default: capacity-safe
-    ``n_shards``). ``use_kernel=None`` (auto, the default) fuses the
+    single-exchange parity oracle. ``collector_submesh`` controls sub-mesh
+    routing for the streamed pipeline: ``None`` (default) activates it
+    automatically when the balanced grouped layout qualifies — each flush
+    group's exchange is then a dense, zero-slack collective confined to
+    its owning shard slice via ``axis_index_groups`` — ``True`` demands it
+    (ValueError otherwise), ``False`` forces the whole-mesh fallback.
+    ``stream_slack`` overrides the whole-mesh streaming fallback's
+    per-group buffer sizing (default: capacity-safe ``n_shards`` in
+    balanced mode, probed per group size in uniform mode).
+    ``use_kernel=None`` (auto, the default) fuses the
     exchange's local bucket gathers into the Pallas
     ``bucket_permute``/``unbucket_permute`` kernels on TPU — where the
     one-pass HBM copies win — and keeps the jnp gathers elsewhere;
@@ -188,7 +220,8 @@ def sfpl_epoch_sharded(key, st, data, split: SplitModel, opt_c, opt_s, *,
     n_shards = mesh_axis_size(mesh, axis)
     check_sfpl_layout(num_clients, batch_size, n_shards, alpha=alpha,
                       collector_mode=collector_mode,
-                      collector_pipeline=collector_pipeline)
+                      collector_pipeline=collector_pipeline,
+                      collector_submesh=collector_submesh)
     placement = RD.DataMesh(mesh, axis)
     return RD.sfpl_round(
         key, st, data, split, opt_c, opt_s, num_clients=num_clients,
@@ -196,7 +229,8 @@ def sfpl_epoch_sharded(key, st, data, split: SplitModel, opt_c, opt_s, *,
         collector=placement.collector(
             num_clients, alpha=alpha, mode=collector_mode, slack=slack,
             use_kernel=use_kernel, check_capacity=check_capacity,
-            pipeline=collector_pipeline, stream_slack=stream_slack))
+            pipeline=collector_pipeline, stream_slack=stream_slack,
+            submesh=collector_submesh))
 
 
 def make_sfpl_epoch_sharded(split: SplitModel, opt_c, opt_s, data, *,

@@ -68,9 +68,10 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.core import collector as C
 from repro.core.bn_policy import fedavg, aggregate_bn_state
 from repro.core.collector_dist import (
-    build_route_plans, exact_pair_cap, make_grouped_balanced_perm,
-    mesh_axis_size, pair_capacity, plan_exchange, plan_exchange_complete,
-    plan_exchange_issue, plan_shuffle, uniform_auto_slack)
+    build_route_plans, build_submesh_route_plans, exact_pair_cap,
+    make_grouped_balanced_perm, mesh_axis_size, pair_capacity,
+    plan_exchange, plan_exchange_complete, plan_exchange_issue,
+    plan_shuffle, submesh_slice_size, uniform_auto_slack)
 
 
 class PreparedPerm(NamedTuple):
@@ -164,7 +165,7 @@ class DataMesh:
 
     def collector(self, num_clients, *, alpha=1.0, mode="balanced",
                   slack=None, use_kernel=None, check_capacity=False,
-                  pipeline="sync", stream_slack=None):
+                  pipeline="sync", stream_slack=None, submesh=None):
         if pipeline not in ("sync", "double_buffered"):
             raise ValueError(f"unknown collector pipeline {pipeline!r}: "
                              f"expected 'sync' or 'double_buffered'")
@@ -173,7 +174,14 @@ class DataMesh:
                       slack=slack, use_kernel=use_kernel,
                       check_capacity=check_capacity)
         if pipeline == "double_buffered":
-            return StreamingAllToAll(stream_slack=stream_slack, **common)
+            return StreamingAllToAll(stream_slack=stream_slack,
+                                     submesh=submesh, **common)
+        if submesh:
+            raise ValueError(
+                "collector_submesh applies to the double_buffered "
+                "pipeline (the sync exchange is already dense for "
+                "balanced permutations); drop the flag or use "
+                "pipeline='double_buffered'")
         return MeshAllToAll(**common)
 
 
@@ -306,20 +314,43 @@ class StreamingAllToAll(MeshAllToAll):
     the inverse permutation — exactly what autodiff emits for the
     synchronous strategy's in-loss ``permute``.
 
-    ``stream_slack`` sizes the per-group exchange buffers; the default
-    ``None`` uses ``n_shards`` (capacity ``b_g + 1`` per pair), which
-    admits ANY group permutation drop-free at the price of wider buffers —
-    streaming trades exchange bandwidth for overlap. (The sync dense path
-    does not apply here: each group is RE-sharded over the whole mesh for
-    its own exchange, so even balanced group permutations have
-    non-deterministic per-pair loads under the group's finer slabs.)
+    ``submesh`` selects the group-structured SUB-MESH exchange: when the
+    grouped-balanced layout qualifies (``collector_dist.
+    submesh_slice_size`` — every flush group covers the same number ``S``
+    of whole shard slabs and ``b % S == 0``), each group's collective is
+    confined to its owning ``S``-shard slice via ``axis_index_groups``
+    and the per-group plan is DENSE: exact capacity ``b/S`` per in-slice
+    pair, no overflow counter, no pad row, zero slack — each group's send
+    buffer is exactly the ``b``-row slab per shard instead of the
+    whole-mesh fallback's ``n_g + n_shards`` rows. ``None`` (default)
+    auto-enables
+    it exactly when the layout qualifies; ``True`` raises on layouts that
+    don't; ``False`` forces the whole-mesh fallback. The pool-width
+    dataflow also changes: the full client forward runs once (each
+    shard's clients ARE its groups' rows — the forward is already
+    slice-local), and the per-group collectives on disjoint slices
+    pipeline against each other and the completes.
+
+    ``stream_slack`` sizes the whole-mesh fallback's per-group exchange
+    buffers (setting it opts OUT of sub-mesh routing — the fallback
+    re-shards each group over the whole mesh, where group permutations
+    have non-deterministic loads under the ``b_g = n_g / n_shards``-row
+    fine slabs). The default ``None`` auto-sizes per mode: balanced
+    groups get the capacity-safe ``slack = n_shards`` (``cap = b_g + 1``
+    per pair — at least the ``b_g`` rows of a fine slab plus the +1 of
+    the capacity formula, so ANY permutation of the group is drop-free);
+    uniform groups probe ``uniform_auto_slack`` per distinct group row
+    count (memoized on ``(n_g, n_shards)``) with the in-graph capacity
+    check forced on, exactly like the sync uniform path.
 
     Layout contract: every flush group's row count must divide by the
     shard count (each group is row-sharded over the whole mesh for its
-    exchange); ``engine_dist.check_sfpl_layout(...,
+    exchange) OR the layout must qualify for sub-mesh routing;
+    ``engine_dist.check_sfpl_layout(...,
     collector_pipeline="double_buffered")`` validates this eagerly.
     """
     stream_slack: Optional[float] = None
+    submesh: Optional[bool] = None
 
     pipelined = True
 
@@ -340,12 +371,67 @@ class StreamingAllToAll(MeshAllToAll):
             c0 += c
         return out
 
-    def _sub_slack(self):
+    def submesh_slices(self, n):
+        """Shards per owning slice when sub-mesh routing is active for a
+        ``n``-row pool, else ``None`` (auto-resolution of the ``submesh``
+        knob). ``submesh=True`` raises on non-qualifying layouts with the
+        disqualifying condition named."""
+        if self.submesh is False:
+            return None
+        reason, slices = None, None
+        if self.mode != "balanced":
+            reason = ("sub-mesh routing needs the deterministic per-pair "
+                      "loads of collector_mode='balanced'; uniform "
+                      "permutations fall back to the slack-buffered "
+                      "whole-mesh exchange")
+        elif self.slack is not None or self.stream_slack is not None:
+            reason = ("an explicit slack/stream_slack override forces the "
+                      "slack-buffered whole-mesh plan shape")
+        else:
+            slices = submesh_slice_size(
+                n, mesh_axis_size(self.mesh, self.axis),
+                self.group_rows(n))
+            if slices is None:
+                reason = ("every flush group must cover the same number "
+                          "of whole shard slabs, with the slab divisible "
+                          "by that span (collector_dist."
+                          "submesh_slice_size)")
+        if slices is None and self.submesh:
+            raise ValueError(
+                f"collector_submesh=True but the layout does not qualify "
+                f"for the sub-mesh streaming exchange: {reason} "
+                f"(num_clients={self.num_clients}, alpha={self.alpha}, "
+                f"n={n}, shards="
+                f"{mesh_axis_size(self.mesh, self.axis)})")
+        return slices
+
+    def _check(self):
+        # the streamed uniform fallback's auto slack is PROBED per group
+        # size (empirical, not worst-case), so — like the sync uniform
+        # path — the in-graph capacity check is forced on with it
+        return self.check_capacity or (self.mode == "uniform"
+                                       and self.slack is None
+                                       and self.stream_slack is None)
+
+    def _sub_slack(self, n_g):
+        """Whole-mesh fallback slack for one ``n_g``-row flush group."""
         if self.stream_slack is not None:
             return self.stream_slack
-        # capacity-safe default: cap = b_g + 1 holds every row of a source
-        # slab, so any permutation of the group is drop-free
-        return float(mesh_axis_size(self.mesh, self.axis))
+        n_shards = mesh_axis_size(self.mesh, self.axis)
+        if self.mode == "uniform":
+            # probed at the group's own row count — the memo key
+            # (n_g, n_shards) is shared by every same-sized group and
+            # every re-trace, so the probe permutations run once
+            return uniform_auto_slack(n_g, n_shards)
+        # capacity-safe balanced fallback: slack = n_shards gives
+        # cap = b_g + 1 per pair (b_g = n_g / n_shards, the group's fine
+        # slab), enough for any permutation that routes a whole fine slab
+        # to one destination — drop-free without probing, at the price of
+        # an (n_g + n_shards)-row send buffer per shard per group. The
+        # sub-mesh path replaces this entirely: its per-group plans are
+        # dense (cap exactly b/S, no slack) because the group never
+        # leaves its own slice.
+        return float(n_shards)
 
     def _sub_perm(self, perm, bounds):
         r0, r1 = bounds
@@ -354,40 +440,66 @@ class StreamingAllToAll(MeshAllToAll):
     def prepare(self, perm, n):
         """Per-flush-group (forward, backward) route plans, built once per
         step and shared by the issue/complete exchanges AND ``route_back``
-        — the streamed counterpart of ``MeshAllToAll.prepare``."""
+        — the streamed counterpart of ``MeshAllToAll.prepare``. With
+        sub-mesh routing active, every pair is DENSE
+        (``build_submesh_route_plans``); otherwise each group gets
+        slack-buffered whole-mesh plans at its own ``_sub_slack``."""
         n_shards = mesh_axis_size(self.mesh, self.axis)
+        slices = self.submesh_slices(n)
         plans = []
-        for bounds in self.group_bounds(n):
-            n_g = bounds[1] - bounds[0]
-            cap = pair_capacity(n_g, n_shards, self._sub_slack())
-            plans.append(build_route_plans(
-                self._sub_perm(perm, bounds), n_shards, cap=cap,
-                may_drop=True))
+        for g, bounds in enumerate(self.group_bounds(n)):
+            sub = self._sub_perm(perm, bounds)
+            if slices is not None:
+                plans.append(build_submesh_route_plans(
+                    sub, g, n_shards, slices))
+            else:
+                n_g = bounds[1] - bounds[0]
+                cap = pair_capacity(n_g, n_shards, self._sub_slack(n_g))
+                plans.append(build_route_plans(sub, n_shards, cap=cap,
+                                               may_drop=True))
         return PreparedPerm(perm, tuple(plans))
+
+    @staticmethod
+    def _plans_are_submesh(prep):
+        return prep.plans[0][0].slice_size is not None
 
     def permute(self, x, prep):
         """Blocking whole-pool shuffle under the per-group plans (used for
         the label pool, which never interleaves with client compute):
-        each sealed flush group is one plan exchange."""
+        each sealed flush group is one plan exchange. Sub-mesh plans take
+        the whole pool (each exchange is confined to its slice by
+        ``axis_index_groups``) and the group outputs are mask-combined;
+        fallback plans take the group's rows and the outputs concatenate."""
         n = x.shape[0]
         if not isinstance(prep, PreparedPerm):
             prep = self.prepare(prep, n)
         parts = []
         for g, (r0, r1) in enumerate(self.group_bounds(n)):
+            rows = (x if self._plans_are_submesh(prep)
+                    else jax.lax.slice_in_dim(x, r0, r1, axis=0))
             parts.append(plan_shuffle(
-                jax.lax.slice_in_dim(x, r0, r1, axis=0), prep.plans[g],
+                rows, prep.plans[g],
                 mesh=self.mesh, axis=self.axis,
                 use_kernel=self._use_k(x.dtype),
-                check_capacity=self.check_capacity))
+                check_capacity=self._check()))
+        return self.assemble(parts, prep, n)
+
+    def assemble(self, parts, prep, n):
+        """Combine per-group exchange outputs into the shuffled pool."""
+        if self._plans_are_submesh(prep):
+            return _combine_slices(parts, self.group_bounds(n))
         return _concat_parts(parts)
 
     def issue(self, rows, prep, g):
         """Launch flush group ``g``'s exchange; returns the in-flight
-        buffer slot (``collector_dist.plan_exchange_issue``)."""
+        buffer slot (``collector_dist.plan_exchange_issue``). ``rows`` is
+        the group's pooled rows on the fallback path, the WHOLE pool on
+        the sub-mesh path (where the plan's ``axis_index_groups`` confine
+        the collective to group ``g``'s slice)."""
         return plan_exchange_issue(
             rows, prep.plans[g][0], mesh=self.mesh, axis=self.axis,
             use_kernel=self._use_k(rows.dtype),
-            check_capacity=self.check_capacity)
+            check_capacity=self._check())
 
     def complete(self, slot):
         """Land an in-flight buffer slot: the group's shuffled rows."""
@@ -403,18 +515,38 @@ class StreamingAllToAll(MeshAllToAll):
         the synchronous path, so trajectories stay bit-comparable."""
         if not isinstance(prep, PreparedPerm):
             prep = self.prepare(prep, n)
+        submesh = self._plans_are_submesh(prep)
         parts = []
-        for g, bounds in enumerate(self.group_bounds(n)):
-            r0, r1 = bounds
+        for g, (r0, r1) in enumerate(self.group_bounds(n)):
+            rows = (g_shuf if submesh
+                    else jax.lax.slice_in_dim(g_shuf, r0, r1, axis=0))
             parts.append(plan_exchange(
-                jax.lax.slice_in_dim(g_shuf, r0, r1, axis=0),
-                prep.plans[g][1], mesh=self.mesh, axis=self.axis,
+                rows, prep.plans[g][1], mesh=self.mesh, axis=self.axis,
                 use_kernel=self._use_k(g_shuf.dtype)))
-        return _concat_parts(parts)
+        return self.assemble(parts, prep, n)
 
 
 def _concat_parts(parts):
     return parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=0)
+
+
+def _combine_slices(parts, bounds):
+    """Assemble pool-width sub-mesh exchange outputs: part ``g`` is valid
+    only at rows ``bounds[g]`` (its owning slice's slabs — the other
+    shards exchanged garbage within their own slices). A row-index masked
+    select keeps every array in the pool's home sharding — concatenating
+    slices of a sharded pool would force a re-layout — and is exact under
+    autodiff: the cotangent reaching part ``g`` is zero outside its slice,
+    so each backward exchange contributes only its own slice's gradients."""
+    if len(parts) == 1:
+        return parts[0]
+    out = parts[0]
+    rows = jnp.arange(out.shape[0])
+    for (r0, r1), part in zip(bounds[1:], parts[1:]):
+        mask = ((rows >= r0) & (rows < r1)).reshape(
+            (-1,) + (1,) * (part.ndim - 1))
+        out = jnp.where(mask, part, out)
+    return out
 
 
 def streamed_shuffle(collector, prep, n, produce_group):
@@ -423,13 +555,17 @@ def streamed_shuffle(collector, prep, n, produce_group):
     ``prep`` is the step's ``collector.prepare(perm, n)`` (a bare
     permutation is accepted and prepared on the spot).
     ``produce_group(g)`` returns flush group ``g``'s pooled rows (the
-    client forward of that group, in ``sfpl_round``). The filled slot's
-    exchange is ISSUED before the next group's rows are produced and
-    COMPLETED after — issue(k) and produce(k+1) share no data dependence,
-    so the all_to_all overlaps the next group's compute under a
-    latency-hiding schedule. The final in-flight slot is DRAINED after
-    the loop (the epilogue tests/test_streaming.py property-checks:
-    the last flush group is never dropped).
+    client forward of that group, in ``sfpl_round``) — or, under sub-mesh
+    plans, the whole pool (each exchange is confined to its slice by the
+    plan's ``axis_index_groups``). The filled slot's exchange is ISSUED
+    before the next group's rows are produced and COMPLETED after —
+    issue(k) and produce(k+1) share no data dependence, so the all_to_all
+    overlaps the next group's compute under a latency-hiding schedule;
+    sub-mesh collectives additionally run on DISJOINT shard slices, so
+    every in-flight group can progress simultaneously. The final
+    in-flight slot is DRAINED after the loop (the epilogue
+    tests/test_streaming.py property-checks: the last flush group is
+    never dropped).
 
     Returns the shuffled pool — row for row equal to
     ``collector.permute(pool, perm)`` on the synchronous strategy.
@@ -449,7 +585,7 @@ def streamed_shuffle(collector, prep, n, produce_group):
     # drain epilogue: the last filled buffer is still in flight
     parts.append(collector.complete(
         collector.issue(slot, prep, len(bounds) - 1)))
-    return _concat_parts(parts)
+    return collector.assemble(parts, prep, n)
 
 
 # --------------------------------------------------------------------------
@@ -492,7 +628,13 @@ def sfpl_round(key, st, data, split, opt_c, opt_s, *, num_clients,
     n_pool = num_clients * batch_size
     client_upd = make_client_update(split, opt_c)
     streamed = getattr(collector, "pipelined", False)
-    cgroups = collector.client_groups() if streamed else None
+    # sub-mesh routing resolves eagerly (it only depends on the layout):
+    # under it the client forward is NOT re-cut per group — each shard's
+    # clients already are its groups' rows — so the full vmap runs once
+    # and the per-group collectives pipeline over the pool
+    submesh = streamed and collector.submesh_slices(n_pool) is not None
+    cgroups = (collector.client_groups()
+               if streamed and not submesh else None)
 
     def one_step(carry, idx):
         st, key = carry
@@ -515,7 +657,23 @@ def sfpl_round(key, st, data, split, opt_c, opt_s, *, num_clients,
                                                y_shuf, True, None)
             return loss, nss
 
-        if streamed:
+        if streamed and submesh:
+            # sub-mesh streaming: the full client vmap IS the per-group
+            # forward — each shard computes only its own clients, and a
+            # group's clients live exactly on its owning slice — so the
+            # pool assembles in home layout once and the two-slot
+            # pipeline runs the per-group DENSE collectives over it,
+            # each confined to its slice by the plan's axis_index_groups
+            # (disjoint slices: all in-flight groups progress at once).
+            A, ncbn = jax.vmap(fwd)(st["cp"], st["cbn"], xb)
+            a_pool = A.reshape((n_pool,) + A.shape[2:])
+            a_shuf = streamed_shuffle(collector, prep, n_pool,
+                                      lambda g: a_pool)
+            (loss, nsbn), (g_sp, g_shuf) = jax.value_and_grad(
+                srv_loss_on, argnums=(0, 1), has_aux=True)(
+                st["sp"], a_shuf)
+            g_pool = collector.route_back(g_shuf, prep, n_pool)
+        elif streamed:
             # 1+2+3 pipelined: the client forward runs flush group by
             # flush group, and each filled group's all_to_all is in
             # flight while the next group computes (two-slot pipeline,

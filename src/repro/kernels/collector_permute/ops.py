@@ -38,7 +38,15 @@ def collector_permute(x, perm, *, interpret=False):
 def bucket_permute(x, idx, *, interpret=False):
     """Route-plan send gather: x: (R, ...) local rows, idx: (S, cap) the
     two-level (destination bucket, slot) -> source row map. Returns the
-    (S*cap, ...) send buffer ``out[s*cap + r] = x[idx[s, r]]``."""
+    (S*cap, ...) send buffer ``out[s*cap + r] = x[idx[s, r]]``.
+
+    S is the exchange's bucket shard count, NOT necessarily the full mesh:
+    under sub-mesh streaming each flush group's exchange is confined to
+    its owning shard slice, so ``(S, cap)`` is the sub-mesh-local
+    ``(slice_size, b // slice_size)`` and varies per group. The kernel is
+    shape-generic — the two-level index map carries the bucket count in
+    ``idx.shape`` — so no per-group recompilation beyond jit's usual
+    shape specialization."""
     x2, d, _, block_d, feat = _flatten_features(x)
     y = bucket_permute_2d(x2, idx, block_d=block_d, interpret=interpret)
     return y[:, :d].reshape((idx.shape[0] * idx.shape[1],) + feat)
@@ -48,7 +56,9 @@ def bucket_permute(x, idx, *, interpret=False):
 def unbucket_permute(x, idx, *, interpret=False):
     """Route-plan receive gather (the ``bucket_permute`` mirror): x:
     (R, ...) flat received block, idx: (B,) output row -> flat slot.
-    Returns the (B, ...) shuffled slab ``out[i] = x[idx[i]]``."""
+    Returns the (B, ...) shuffled slab ``out[i] = x[idx[i]]``. Under
+    sub-mesh streaming R is the sub-mesh-local ``slice_size * cap``
+    (== the slab), not the full mesh's receive width."""
     x2, d, _, block_d, feat = _flatten_features(x)
     y = unbucket_permute_2d(x2, idx, block_d=block_d, interpret=interpret)
     return y[:, :d].reshape((idx.shape[0],) + feat)

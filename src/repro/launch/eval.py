@@ -11,7 +11,7 @@ Usage:
   PYTHONPATH=src python -m repro.launch.eval --arch qwen3-8b --batches 8
   PYTHONPATH=src python -m repro.launch.eval --paper [--sharded] \
       [--clients 8] [--epochs 4] [--alpha 1.0] \
-      [--pipeline double_buffered]
+      [--pipeline double_buffered] [--submesh]
 """
 from __future__ import annotations
 
@@ -61,8 +61,9 @@ def evaluate_lm(spec, cfg, params, *, batches=8, batch=8, seq=64, seed=0):
 
 
 def evaluate_paper(*, num_clients=8, epochs=4, batch_size=8, sharded=False,
-                   alpha=1.0, pipeline="sync", use_kernel=None, depth=8,
-                   width=8, hw=8, lr=0.05, seed=0):
+                   alpha=1.0, pipeline="sync", submesh=None,
+                   use_kernel=None, depth=8, width=8, hw=8, lr=0.05,
+                   seed=0):
     """Train SFPL and SFLv2 through the unified round engine on the same
     data, fleet size, and placement; return accuracy under BOTH test
     protocols (IID and non-IID batches) per scheme, so the head-to-head
@@ -92,7 +93,8 @@ def evaluate_paper(*, num_clients=8, epochs=4, batch_size=8, sharded=False,
             from repro.core import engine_dist as ED
             shards = ED.fit_shards(num_clients, batch_size, scheme=scheme,
                                    alpha=alpha,
-                                   collector_pipeline=pipeline)
+                                   collector_pipeline=pipeline,
+                                   collector_submesh=submesh)
             mesh = ED.make_data_mesh(shards)
             if scheme == "sfpl":
                 st = ED.shard_dcml_state(st, mesh)
@@ -100,7 +102,8 @@ def evaluate_paper(*, num_clients=8, epochs=4, batch_size=8, sharded=False,
                     split, opt, opt, ED.shard_client_data(data, mesh),
                     mesh=mesh, num_clients=num_clients,
                     batch_size=batch_size, alpha=alpha,
-                    collector_pipeline=pipeline, use_kernel=use_kernel)
+                    collector_pipeline=pipeline,
+                    collector_submesh=submesh, use_kernel=use_kernel)
             else:
                 epoch = ED.make_sflv2_epoch_sharded(
                     split, opt, opt, data, mesh=mesh,
@@ -146,6 +149,12 @@ def main():
                     choices=("sync", "double_buffered"),
                     help="sharded SFPL collector pipeline (with --paper "
                          "--sharded)")
+    ap.add_argument("--submesh", dest="submesh", action="store_true",
+                    default=None,
+                    help="force sub-mesh streaming on (default: auto when "
+                         "the balanced grouped layout qualifies)")
+    ap.add_argument("--no-submesh", dest="submesh", action="store_false",
+                    help="force the whole-mesh streaming fallback")
     ap.add_argument("--use-kernel", dest="use_kernel", action="store_true",
                     default=None,
                     help="force the Pallas collector bucket kernels on "
@@ -156,7 +165,7 @@ def main():
     if args.paper:
         rep = evaluate_paper(num_clients=args.clients, epochs=args.epochs,
                              sharded=args.sharded, alpha=args.alpha,
-                             pipeline=args.pipeline,
+                             pipeline=args.pipeline, submesh=args.submesh,
                              use_kernel=args.use_kernel)
         chance = 100.0 / args.clients
         print(f"matched fleet ({args.clients} clients, "

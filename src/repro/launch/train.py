@@ -14,7 +14,9 @@ Two modes:
     ``--alpha``; SFLv2: the server stream sharded over the batch axis).
     ``--pipeline double_buffered`` streams the collector: each flush
     group's exchange overlaps the next group's client forward (see
-    docs/collector_modes.md). The exchange's local bucket gathers run
+    docs/collector_modes.md); ``--submesh`` / ``--no-submesh`` force the
+    streamed sub-mesh routing on/off (default: auto when the balanced
+    grouped layout qualifies). The exchange's local bucket gathers run
     through the Pallas collector kernels automatically on TPU
     (``--use-kernel`` / ``--no-kernel`` force the choice). To simulate a
     mesh on CPU, set XLA_FLAGS=--xla_force_host_platform_device_count=8
@@ -25,7 +27,8 @@ Usage:
       --steps 50 [--sfpl] [--ckpt out.npz]
   PYTHONPATH=src python -m repro.launch.train --paper --sharded \
       --clients 8 --epochs 4 [--scheme sflv2] [--alpha 0.5] \
-      [--collector uniform] [--pipeline double_buffered] [--use-kernel]
+      [--collector uniform] [--pipeline double_buffered] [--submesh] \
+      [--use-kernel]
 """
 from __future__ import annotations
 
@@ -87,7 +90,7 @@ def train_lm(arch_id, *, steps=50, batch=8, seq=64, smoke=True, sfpl=False,
 def train_paper(*, num_clients=8, epochs=4, batch_size=8, sharded=False,
                 use_kernel=None, depth=8, width=8, hw=8, lr=0.05,
                 scheme="sfpl", alpha=1.0, collector="balanced",
-                pipeline="sync", log_every=1):
+                pipeline="sync", submesh=None, log_every=1):
     """DCML rounds on synthetic CIFAR, one client per class (only positive
     labels). ``scheme`` picks SFPL (Algorithm 1 + 2) or the SFLv2 baseline;
     ``sharded`` runs the same round body on a mesh over all visible devices
@@ -125,18 +128,21 @@ def train_paper(*, num_clients=8, epochs=4, batch_size=8, sharded=False,
         else:
             shards = ED.fit_shards(num_clients, batch_size, alpha=alpha,
                                    collector_mode=collector,
-                                   collector_pipeline=pipeline)
+                                   collector_pipeline=pipeline,
+                                   collector_submesh=submesh)
             mesh = ED.make_data_mesh(shards)
             print(f"sharded SFPL: {shards}-way data mesh over {n_dev} "
                   f"device(s), collector={collector}, alpha={alpha}, "
-                  f"pipeline={pipeline}, use_kernel={use_kernel}")
+                  f"pipeline={pipeline}, submesh={submesh}, "
+                  f"use_kernel={use_kernel}")
             data_dev = ED.shard_client_data(data, mesh)
             st = ED.shard_dcml_state(st, mesh)
             epoch = ED.make_sfpl_epoch_sharded(
                 split, opt, opt, data_dev, mesh=mesh,
                 num_clients=num_clients, batch_size=batch_size,
                 use_kernel=use_kernel, alpha=alpha,
-                collector_mode=collector, collector_pipeline=pipeline)
+                collector_mode=collector, collector_pipeline=pipeline,
+                collector_submesh=submesh)
     elif scheme == "sflv2":
         epoch = jax.jit(lambda k, s: E.sflv2_epoch(
             k, s, data, split, opt, opt, num_clients=num_clients,
@@ -200,6 +206,14 @@ def main():
                          "blocking exchange) or double_buffered (per-"
                          "flush-group exchange overlapping the next "
                          "group's client forward)")
+    ap.add_argument("--submesh", dest="submesh", action="store_true",
+                    default=None,
+                    help="force sub-mesh streaming on: each flush group's "
+                         "exchange is a dense zero-slack collective over "
+                         "its owning shard slice (default: auto — on when "
+                         "the balanced grouped layout qualifies)")
+    ap.add_argument("--no-submesh", dest="submesh", action="store_false",
+                    help="force the whole-mesh streaming fallback")
     ap.add_argument("--clients", type=int, default=8)
     ap.add_argument("--epochs", type=int, default=4)
     args = ap.parse_args()
@@ -209,7 +223,7 @@ def main():
                              use_kernel=args.use_kernel,
                              scheme=args.scheme, alpha=args.alpha,
                              collector=args.collector,
-                             pipeline=args.pipeline,
+                             pipeline=args.pipeline, submesh=args.submesh,
                              lr=args.lr if args.lr is not None else 0.05)
     else:
         losses = train_lm(args.arch, steps=args.steps, batch=args.batch,

@@ -264,6 +264,98 @@ def test_exact_pair_cap_matches_deterministic_loads():
     assert exact_pair_cap(64, 8, [8] * 8) == 8
 
 
+WORKER_SUBMESH_JAXPR = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import re
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import round as RD
+from repro.core.round import streamed_shuffle
+
+mesh = jax.make_mesh((8,), ("data",))
+coll = RD.StreamingAllToAll(mesh=mesh, num_clients=8, alpha=0.25,
+                            mode="balanced", submesh=True)
+n, d = 64, 3
+b = n // 8
+perm = coll.make_perm(jax.random.PRNGKey(0), n)
+prep = coll.prepare(perm, n)
+groups = len(coll.group_bounds(n))
+assert groups == 4
+
+# every per-group plan pair is DENSE: 2 index leaves, no overflow
+# operand, slice-local capacity with zero slack (S * cap == b)
+for fwd, bwd in prep.plans:
+    for plan in (fwd, bwd):
+        assert plan.slice_size == 2, plan.slice_size
+        assert plan.dense and plan.overflow is None
+        assert not plan.may_drop
+        assert plan.slice_size * plan.cap == b, (plan.cap, b)
+        assert len(jax.tree_util.tree_leaves(plan)) == 2
+print("submesh-dense-plan OK")
+
+x = jnp.zeros((n, d))
+fwd_jaxpr = str(jax.make_jaxpr(
+    lambda v, pr: streamed_shuffle(coll, pr, n, lambda g: v))(x, prep))
+assert fwd_jaxpr.count("all_to_all") == groups, fwd_jaxpr
+assert fwd_jaxpr.count("sort[") == 0, fwd_jaxpr
+# zero slack padding at every grouped flush: each collective moves the
+# per-shard (S=2, cap=4, d) bucket — exactly the b-row slab, no b_g + 1
+shapes = re.findall(r"f32\[([\d,]+)\] = all_to_all", fwd_jaxpr)
+assert len(shapes) == groups, fwd_jaxpr
+for shape in shapes:
+    s_, cap_, d_ = map(int, shape.split(","))
+    assert (s_, cap_ * s_, d_) == (2, b, d), shape
+print("submesh-one-collective OK")
+
+back_jaxpr = str(jax.make_jaxpr(
+    lambda v, pr: coll.route_back(v, pr, n))(x, prep))
+assert back_jaxpr.count("all_to_all") == groups, back_jaxpr
+assert back_jaxpr.count("sort[") == 0, back_jaxpr
+print("submesh-route-back OK")
+"""
+
+
+@pytest.mark.parametrize("_", [0])
+def test_submesh_stream_is_one_collective_per_group(_, tmp_path):
+    """Jaxpr inspection at 8 forced host devices: the sub-mesh streamed
+    path emits exactly ONE all_to_all per flush group (and per group on
+    the route-back), zero sorts, and every per-group plan is dense —
+    2 index leaves, no overflow operand, zero slack padding."""
+    out = _run_worker(tmp_path, "worker_submesh_jaxpr.py",
+                      WORKER_SUBMESH_JAXPR, 420)
+    for token in ("submesh-dense-plan OK", "submesh-one-collective OK",
+                  "submesh-route-back OK"):
+        assert token in out, out
+
+
+def test_submesh_plan_builder_is_sortfree():
+    """The sub-mesh plan builder needs no mesh: structural checks run
+    in-process. Plans are dense at the slice-local exact capacity and the
+    builder's jaxpr contains no sort and no collective."""
+    from repro.core.collector_dist import (build_submesh_route_plans,
+                                           make_balanced_perm)
+    n_shards, S, b = 8, 2, 8
+    n_g = S * b
+    sub = make_balanced_perm(jax.random.PRNGKey(0), n_g, S)
+    fwd, bwd = build_submesh_route_plans(sub, 3, n_shards, S)
+    for plan in (fwd, bwd):
+        assert plan.dense and plan.slice_size == S
+        assert plan.overflow is None and not plan.may_drop
+        assert plan.cap == b // S                 # exact slice-local cap
+        assert plan.send_idx.shape == (n_shards, b)
+        assert len(jax.tree_util.tree_leaves(plan)) == 2
+    # the embedded rows live exactly at the owning slice [3*S, 4*S)
+    send = np.asarray(fwd.send_idx)
+    outside = np.ones(n_shards, bool)
+    outside[3 * S:4 * S] = False
+    assert (send[outside] == 0).all()
+    assert (send[~outside] != 0).any()
+    jaxpr = str(jax.make_jaxpr(
+        lambda p: build_submesh_route_plans(p, 3, n_shards, S))(sub))
+    assert jaxpr.count("sort[") == 0, jaxpr
+    assert jaxpr.count("all_to_all") == 0, jaxpr
+
+
 def test_uniform_auto_slack_probing_is_cached():
     """The 16 host-side probe permutations run once per distinct
     (n, shards, groups, probes, seed, margin) key — re-tracing a jitted
