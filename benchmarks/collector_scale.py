@@ -33,9 +33,18 @@ fraction of the sync epoch the streamed epoch saved (negative on this
 CPU harness means the pipeline's extra buffer traffic outweighed the
 overlap — the gap the sub-mesh record exists to close).
 
+Every config is additionally swept over ``compute_dtype`` in
+{float32, bfloat16} (``--compute-dtype both``, the default): the bf16
+records run the mixed-precision ``ComputePolicy`` engine (f32 master
+params, bf16 client forward and smashed exchange) and every record
+carries ``compute_dtype`` plus ``exchange_bytes`` — the wire bytes of
+one forward pool exchange from the epoch collector's own
+``exchange_bytes`` (plan shapes are dtype-independent, so the bf16
+payload is exactly half the f32 payload at a matched config).
+
 Run:  PYTHONPATH=src python benchmarks/collector_scale.py \
           [--epochs 2] [--alpha 0.5] [--out BENCH_collector.json] \
-          [--use-kernel]
+          [--use-kernel] [--compute-dtype {float32,bfloat16,both}]
 Writes ``BENCH_collector.json`` (list of per-config records).
 """
 from __future__ import annotations
@@ -62,14 +71,17 @@ from repro.optim import sgd_momentum
 SHARDS = 8
 
 
-def build(num_clients, batch_size, *, hw=8, width=8, seed=0):
+def build(num_clients, batch_size, *, hw=8, width=8, seed=0,
+          compute_dtype="float32"):
+    from repro.launch.train import make_compute_policy
     cfg = R.ResNetConfig(depth=8, num_classes=num_clients, width=width)
     key = jax.random.PRNGKey(seed)
     tx, ty, _, _ = make_synthetic_cifar(
         key, num_classes=num_clients, train_per_class=2 * batch_size,
         test_per_class=2, hw=hw)
     data = partition_positive_labels(tx, ty, num_clients)
-    split = E.make_resnet_split(cfg)
+    split = E.make_resnet_split(cfg, policy=make_compute_policy(
+        compute_dtype, None))
     opt = sgd_momentum(0.05, momentum=0.9, weight_decay=5e-4)
     st = E.init_dcml_state(key, lambda k: R.init(k, cfg), num_clients,
                            opt, opt)
@@ -217,15 +229,26 @@ def bench_phases(data_sh, split, opt, st_sh, mesh, num_clients, batch_size,
     return timers.finalize()
 
 
-def bench_config(num_clients, batch_size, *, epochs, use_kernel, alpha):
+def bench_config(num_clients, batch_size, *, epochs, use_kernel, alpha,
+                 compute_dtype="float32"):
     """Both pipeline records for one (clients, batch) config; the
     single-device reference epoch runs ONCE and is shared, so the two
     records carry a consistent baseline — but each pipeline's phases are
     timed with ITS OWN exchange machinery (a shared dict once hid a
     byte-identical-phases bug in BENCH_collector.json)."""
-    cfg, data, split, opt, st0 = build(num_clients, batch_size)
+    cfg, data, split, opt, st0 = build(num_clients, batch_size,
+                                       compute_dtype=compute_dtype)
     st0_host = jax.tree_util.tree_map(np.asarray, st0)
     key = jax.random.PRNGKey(1)
+
+    # smashed-row geometry of THIS config's policy: the exchange payload
+    # is counted in the dtype the activations actually cross the
+    # collector in (bf16 halves the f32 bytes at identical plan shapes)
+    cp0 = jax.tree_util.tree_map(lambda t: t[0], st0["cp"])
+    cs0 = jax.tree_util.tree_map(lambda t: t[0], st0["cbn"])
+    a1, _ = split.client_fwd(cp0, cs0, data["x"][0, :batch_size])
+    row_elems = int(np.prod(a1.shape[1:]))
+    exchange_dtype = a1.dtype
 
     single = jax.jit(lambda k, s: E.sfpl_epoch(
         k, s, data, split, opt, opt, num_clients=num_clients,
@@ -273,6 +296,18 @@ def bench_config(num_clients, batch_size, *, epochs, use_kernel, alpha):
             **pipe_kw)
         t_sharded, l_sharded = time_epochs(sharded, key, fresh_sharded(),
                                            epochs)
+        # wire bytes of one forward pool exchange, from the EPOCH
+        # collector (sweep alpha, this pipeline's plan shapes) — not the
+        # pinned-alpha phases collector above
+        epoch_coll = RD.DataMesh(mesh).collector(
+            num_clients, alpha=alpha, use_kernel=use_kernel,
+            **{"sync": {},
+               "double_buffered": dict(pipeline="double_buffered",
+                                       submesh=False),
+               "submesh": dict(pipeline="double_buffered",
+                               submesh=True)}[pipeline])
+        eperm = epoch_coll.make_perm(jax.random.PRNGKey(3), n_pool)
+        eprep = epoch_coll.prepare(eperm, n_pool)
         rec = {
             "num_clients": num_clients,
             "batch_size": batch_size,
@@ -281,6 +316,9 @@ def bench_config(num_clients, batch_size, *, epochs, use_kernel, alpha):
             "use_kernel": use_kernel,
             "alpha": alpha,
             "pipeline": pipeline,
+            "compute_dtype": compute_dtype,
+            "exchange_bytes": int(epoch_coll.exchange_bytes(
+                eprep, row_elems, exchange_dtype)),
             "epochs": epochs,
             "sec_per_epoch_single": t_single,
             "sec_per_epoch_sharded": t_sharded,
@@ -293,7 +331,8 @@ def bench_config(num_clients, batch_size, *, epochs, use_kernel, alpha):
             rec["slice_size"] = submesh_slice_size(n_pool, SHARDS,
                                                    group_rows)
         print(f"N={num_clients:3d} B={batch_size:3d} "
-              f"pooled={rec['pooled_batch']:4d} {pipeline:15s}  "
+              f"pooled={rec['pooled_batch']:4d} {pipeline:15s} "
+              f"{compute_dtype:8s} exch {rec['exchange_bytes']:8d}B  "
               f"single {t_single:.3f}s  sharded {t_sharded:.3f}s  "
               f"dloss {rec['max_loss_delta']:.2e}  "
               f"[perm {phases['perm_build_s']*1e3:.1f}ms | plan "
@@ -324,7 +363,14 @@ def main():
                          "pipeline multiple groups to overlap")
     ap.add_argument("--clients", type=int, nargs="*", default=[8, 16])
     ap.add_argument("--batches", type=int, nargs="*", default=[8, 16])
+    ap.add_argument("--compute-dtype", dest="compute_dtype",
+                    default="both",
+                    choices=("float32", "bfloat16", "both"),
+                    help="sweep the mixed-precision ComputePolicy path "
+                         "('both' records f32 AND bf16 legs per config)")
     args = ap.parse_args()
+    dtypes = (("float32", "bfloat16") if args.compute_dtype == "both"
+              else (args.compute_dtype,))
 
     records = []
     for n in args.clients:
@@ -344,9 +390,11 @@ def main():
                 print(f"skip N={n} B={b} alpha={args.alpha}: {e}",
                       flush=True)
                 continue
-            records.extend(bench_config(n, b, epochs=args.epochs,
-                                        use_kernel=args.use_kernel,
-                                        alpha=args.alpha))
+            for cd in dtypes:
+                records.extend(bench_config(n, b, epochs=args.epochs,
+                                            use_kernel=args.use_kernel,
+                                            alpha=args.alpha,
+                                            compute_dtype=cd))
     out = {
         "bench": "collector_scale",
         "devices": len(jax.devices()),

@@ -253,6 +253,57 @@ def submesh_axis_groups(n_shards, slice_size):
             for j in range(0, n_shards, slice_size)]
 
 
+def _np_balanced_perm(rng, n, num_shards):
+    """Host-side replica of ``make_balanced_perm``'s structure (shard
+    shuffles composed with the equal-block exchange) for load probing —
+    same distribution, numpy-generated."""
+    b = n // num_shards
+
+    def shard_shuffle():
+        return np.concatenate([rng.permutation(b) + i * b
+                               for i in range(num_shards)])
+
+    p1 = shard_shuffle()
+    blk = b // num_shards
+    src = np.arange(n)
+    shard = src // b
+    pos = src % b
+    p2 = (pos // blk) * b + (pos % blk) + shard * blk
+    p3 = shard_shuffle()
+    return p1[p2[p3]]
+
+
+@functools.lru_cache(maxsize=None)
+def _balanced_stream_slack_cached(n, num_shards, span, probes, seed, margin):
+    rng = np.random.default_rng(seed)
+    worst = 0
+    for _ in range(probes):
+        perm = (_np_balanced_perm(rng, n, span) if span > 1
+                else rng.permutation(n))
+        worst = max(worst, max_pair_load(perm, num_shards))
+    b = n // num_shards
+    # never exceed the capacity-safe default slack = num_shards
+    # (cap = b + 1 per pair holds ANY permutation of the group)
+    return min((worst + margin) * num_shards / b, float(num_shards))
+
+
+def balanced_stream_slack(n, num_shards, span, *, probes=16, seed=0,
+                          margin=1):
+    """Auto-size the streamed whole-mesh fallback's exchange slack for one
+    BALANCED flush group by probing ``max_pair_load`` over sample draws of
+    the group's actual permutation family: ``span`` is the number of
+    original shard slabs the group covers — its grouped-balanced
+    sub-permutation is a balanced exchange over ``span`` blocks
+    (``make_grouped_balanced_perm``), measured here against the ``n //
+    num_shards``-row FINE slabs the fallback re-shards the group into
+    (``span <= 1`` groups shuffle uniformly in place). The bound is
+    empirical — pair it with ``check_capacity=True`` — clamped at the old
+    capacity-safe ``num_shards`` default so it can only shrink the buffer,
+    and memoized like ``uniform_auto_slack`` so re-traces never re-probe."""
+    return _balanced_stream_slack_cached(n, num_shards, span, probes, seed,
+                                         margin)
+
+
 @functools.lru_cache(maxsize=None)
 def _uniform_auto_slack_cached(n, num_shards, group_sizes, probes, seed,
                                margin):
@@ -548,6 +599,17 @@ def _plan_exchange_spec(plan):
         return plan.n_shards, plan.cap, None
     return (plan.slice_size, plan.cap,
             submesh_axis_groups(plan.n_shards, plan.slice_size))
+
+
+def plan_payload_bytes(plan, row_elems, itemsize):
+    """Wire bytes of ONE collective under a plan: every one of the
+    ``n_shards`` participating shards ships its ``(S, cap)`` bucket block
+    — ``S = slice_size`` under sub-mesh ``axis_index_groups``, else the
+    whole axis — of ``row_elems``-element rows at ``itemsize`` bytes per
+    element. Shapes are dtype-independent, so a bf16 exchange is exactly
+    half the f32 bytes at a matched plan."""
+    S, cap, _ = _plan_exchange_spec(plan)
+    return plan.n_shards * S * cap * row_elems * itemsize
 
 
 def plan_exchange(x, plan, *, mesh, axis="data", use_kernel=False,

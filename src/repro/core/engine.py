@@ -48,21 +48,41 @@ class SplitModel:
     full_loss: Callable
 
 
-def make_resnet_split(cfg):
-    """SplitModel closures for the paper's ResNet-8/32/56."""
+def make_resnet_split(cfg, policy=None):
+    """SplitModel closures for the paper's ResNet-8/32/56.
+
+    ``policy`` (a ``models.common.ComputePolicy``) selects the
+    mixed-precision compute path: master params stay f32 (autodiff through
+    the in-loss cast delivers f32 grads), convs and the BN+ReLU epilogues
+    run in ``policy.compute_dtype``, the smashed data crosses the collector
+    in that dtype, and the loss reduces in f32 — via the fused Pallas
+    ``softmax_xent`` when ``policy.fused()``.  ``None`` keeps the original
+    f32 graph bit-for-bit."""
     from repro.models import resnet as R
 
+    if policy is None:
+        loss_fn = softmax_cross_entropy
+    elif policy.fused():
+        from repro.kernels.softmax_xent import ops as _xent
+        def loss_fn(logits, y):
+            return _xent.softmax_xent(logits, y,
+                                      interpret=policy.kernel_interpret)
+    else:
+        loss_fn = softmax_cross_entropy
+
     def client_fwd(cp, cs, x, training=True, rmsd=None):
-        return R.client_apply(cp, cs, x, training=training, rmsd=rmsd)
+        return R.client_apply(cp, cs, x, training=training, rmsd=rmsd,
+                              policy=policy)
 
     def server_loss(sp, ss, a, y, training=True, rmsd=None):
         logits, nss = R.server_apply(sp, ss, a, cfg, training=training,
-                                     rmsd=rmsd)
-        return softmax_cross_entropy(logits, y), (nss, logits)
+                                     rmsd=rmsd, policy=policy)
+        return loss_fn(logits, y), (nss, logits)
 
     def full_loss(p, s, x, y, training=True, rmsd=None):
-        logits, ns = R.apply(p, s, x, cfg, training=training, rmsd=rmsd)
-        return softmax_cross_entropy(logits, y), (ns, logits)
+        logits, ns = R.apply(p, s, x, cfg, training=training, rmsd=rmsd,
+                             policy=policy)
+        return loss_fn(logits, y), (ns, logits)
 
     return SplitModel(client_fwd, server_loss, full_loss)
 

@@ -209,8 +209,10 @@ def sfpl_epoch_sharded(key, st, data, split: SplitModel, opt_c, opt_s, *,
     its owning shard slice via ``axis_index_groups`` — ``True`` demands it
     (ValueError otherwise), ``False`` forces the whole-mesh fallback.
     ``stream_slack`` overrides the whole-mesh streaming fallback's
-    per-group buffer sizing (default: capacity-safe ``n_shards`` in
-    balanced mode, probed per group size in uniform mode).
+    per-group buffer sizing (default: probed per distinct group size in
+    BOTH modes — ``balanced_stream_slack`` clamped at the capacity-safe
+    ``n_shards`` ceiling for balanced permutations, ``uniform_auto_slack``
+    for uniform — memoized, with the in-graph capacity check forced on).
     ``use_kernel=None`` (auto, the default) fuses the
     exchange's local bucket gathers into the Pallas
     ``bucket_permute``/``unbucket_permute`` kernels on TPU — where the

@@ -68,10 +68,12 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.core import collector as C
 from repro.core.bn_policy import fedavg, aggregate_bn_state
 from repro.core.collector_dist import (
-    build_route_plans, build_submesh_route_plans, exact_pair_cap,
-    make_grouped_balanced_perm, mesh_axis_size, pair_capacity,
-    plan_exchange, plan_exchange_complete, plan_exchange_issue,
-    plan_shuffle, submesh_slice_size, uniform_auto_slack)
+    balanced_stream_slack, build_route_plans, build_submesh_route_plans,
+    exact_pair_cap, make_grouped_balanced_perm, mesh_axis_size,
+    pair_capacity, plan_exchange, plan_exchange_complete,
+    plan_exchange_issue, plan_payload_bytes, plan_shuffle,
+    submesh_slice_size, uniform_auto_slack)
+from repro.kernels._compat import auto_use_kernel
 
 
 class PreparedPerm(NamedTuple):
@@ -91,9 +93,7 @@ def resolve_use_kernel(flag):
     they win — compiled TPU lowering — and off elsewhere (off-TPU they
     only run in interpret mode, which the CPU-harness benchmarks show
     losing to the jnp gathers)."""
-    if flag is None:
-        return jax.default_backend() == "tpu"
-    return bool(flag)
+    return auto_use_kernel(flag)
 
 
 # --------------------------------------------------------------------------
@@ -208,6 +208,11 @@ class DenseTake:
             return C.shuffle(x, perm, use_kernel=True)
         return jnp.take(x, perm, axis=0)
 
+    def exchange_bytes(self, prep, row_elems, dtype):
+        """Wire bytes of one pool shuffle: a single-device gather never
+        crosses a device boundary."""
+        return 0
+
 
 @dataclasses.dataclass(frozen=True)
 class MeshAllToAll:
@@ -291,6 +296,15 @@ class MeshAllToAll:
             x, prep.plans, mesh=self.mesh, axis=self.axis,
             use_kernel=self._use_k(x.dtype), check_capacity=self._check())
 
+    def exchange_bytes(self, prep, row_elems, dtype):
+        """Wire bytes of one forward pool exchange (the activation
+        ``all_to_all``) for ``row_elems``-element rows in ``dtype`` —
+        ``collector_dist.plan_payload_bytes`` of the step's forward plan.
+        Plan shapes are dtype-independent, so bf16 smashed data is exactly
+        half the f32 payload at a matched config."""
+        return plan_payload_bytes(prep.plans[0], row_elems,
+                                  jnp.dtype(dtype).itemsize)
+
 
 @dataclasses.dataclass(frozen=True)
 class StreamingAllToAll(MeshAllToAll):
@@ -335,13 +349,15 @@ class StreamingAllToAll(MeshAllToAll):
     buffers (setting it opts OUT of sub-mesh routing — the fallback
     re-shards each group over the whole mesh, where group permutations
     have non-deterministic loads under the ``b_g = n_g / n_shards``-row
-    fine slabs). The default ``None`` auto-sizes per mode: balanced
-    groups get the capacity-safe ``slack = n_shards`` (``cap = b_g + 1``
-    per pair — at least the ``b_g`` rows of a fine slab plus the +1 of
-    the capacity formula, so ANY permutation of the group is drop-free);
-    uniform groups probe ``uniform_auto_slack`` per distinct group row
-    count (memoized on ``(n_g, n_shards)``) with the in-graph capacity
-    check forced on, exactly like the sync uniform path.
+    fine slabs). The default ``None`` auto-sizes by PROBING each distinct
+    group size's actual permutation family: uniform groups through
+    ``uniform_auto_slack``, balanced groups through
+    ``balanced_stream_slack`` (sample balanced block exchanges measured
+    against the fine slabs, clamped at the capacity-safe ``n_shards``
+    ceiling they used to default to). Both probes are memoized per
+    ``(n_g, n_shards)``-shaped key and both force the in-graph capacity
+    check on, exactly like the sync uniform path, so an unlucky draw
+    raises instead of dropping rows.
 
     Layout contract: every flush group's row count must divide by the
     shard count (each group is row-sharded over the whole mesh for its
@@ -406,15 +422,19 @@ class StreamingAllToAll(MeshAllToAll):
         return slices
 
     def _check(self):
-        # the streamed uniform fallback's auto slack is PROBED per group
-        # size (empirical, not worst-case), so — like the sync uniform
-        # path — the in-graph capacity check is forced on with it
-        return self.check_capacity or (self.mode == "uniform"
-                                       and self.slack is None
+        # BOTH whole-mesh fallback auto slacks are PROBED per group size
+        # now (empirical, not worst-case) — uniform via
+        # ``uniform_auto_slack``, balanced via ``balanced_stream_slack`` —
+        # so the in-graph capacity check is forced on whenever they may be
+        # in play. Dense sub-mesh plans carry no overflow counter, so the
+        # flag is inert on that path.
+        return self.check_capacity or (self.slack is None
                                        and self.stream_slack is None)
 
-    def _sub_slack(self, n_g):
-        """Whole-mesh fallback slack for one ``n_g``-row flush group."""
+    def _sub_slack(self, n_g, span=1):
+        """Whole-mesh fallback slack for one ``n_g``-row flush group.
+        ``span`` is the number of original shard slabs the group covers
+        (the block count of its grouped-balanced sub-permutation)."""
         if self.stream_slack is not None:
             return self.stream_slack
         n_shards = mesh_axis_size(self.mesh, self.axis)
@@ -423,15 +443,15 @@ class StreamingAllToAll(MeshAllToAll):
             # (n_g, n_shards) is shared by every same-sized group and
             # every re-trace, so the probe permutations run once
             return uniform_auto_slack(n_g, n_shards)
-        # capacity-safe balanced fallback: slack = n_shards gives
-        # cap = b_g + 1 per pair (b_g = n_g / n_shards, the group's fine
-        # slab), enough for any permutation that routes a whole fine slab
-        # to one destination — drop-free without probing, at the price of
-        # an (n_g + n_shards)-row send buffer per shard per group. The
-        # sub-mesh path replaces this entirely: its per-group plans are
-        # dense (cap exactly b/S, no slack) because the group never
+        # balanced fallback: probe the group's actual permutation family
+        # (balanced over ``span`` blocks, uniform in-slab at span <= 1)
+        # against the fine b_g-row slabs, clamped at the capacity-safe
+        # slack = n_shards ceiling (cap = b_g + 1 per pair) it replaces —
+        # memoized like the uniform probe, checked in-graph like it too.
+        # The sub-mesh path replaces this entirely: its per-group plans
+        # are dense (cap exactly b/S, no slack) because the group never
         # leaves its own slice.
-        return float(n_shards)
+        return balanced_stream_slack(n_g, n_shards, span)
 
     def _sub_perm(self, perm, bounds):
         r0, r1 = bounds
@@ -446,6 +466,7 @@ class StreamingAllToAll(MeshAllToAll):
         slack-buffered whole-mesh plans at its own ``_sub_slack``."""
         n_shards = mesh_axis_size(self.mesh, self.axis)
         slices = self.submesh_slices(n)
+        b = n // n_shards
         plans = []
         for g, bounds in enumerate(self.group_bounds(n)):
             sub = self._sub_perm(perm, bounds)
@@ -454,7 +475,12 @@ class StreamingAllToAll(MeshAllToAll):
                     sub, g, n_shards, slices))
             else:
                 n_g = bounds[1] - bounds[0]
-                cap = pair_capacity(n_g, n_shards, self._sub_slack(n_g))
+                # slab span of the group's sub-permutation: >1 only for
+                # groups that got a balanced block exchange
+                # (make_grouped_balanced_perm's aligned, multi-slab case)
+                span = n_g // b if n_g % b == 0 else 1
+                cap = pair_capacity(n_g, n_shards,
+                                    self._sub_slack(n_g, span))
                 plans.append(build_route_plans(sub, n_shards, cap=cap,
                                                may_drop=True))
         return PreparedPerm(perm, tuple(plans))
@@ -507,6 +533,13 @@ class StreamingAllToAll(MeshAllToAll):
         return plan_exchange_complete(
             slot, mesh=self.mesh, axis=self.axis,
             use_kernel=self._use_k(recv.dtype))
+
+    def exchange_bytes(self, prep, row_elems, dtype):
+        """Wire bytes of one forward pool exchange: the sum of the
+        per-flush-group collectives' ``plan_payload_bytes``."""
+        itemsize = jnp.dtype(dtype).itemsize
+        return sum(plan_payload_bytes(plans[0], row_elems, itemsize)
+                   for plans in prep.plans)
 
     def route_back(self, g_shuf, prep, n):
         """Algorithm 1's de-shuffle, explicit: the per-group exchange with

@@ -21,6 +21,15 @@ def tpu_compiler_params(**kwargs):
     return _TPU_COMPILER_PARAMS(**kwargs)
 
 
+def auto_use_kernel(flag):
+    """Resolve the repo-wide ``use_kernel=None`` convention: None means
+    "auto" — Pallas kernels on when the default backend is TPU, the
+    reference path everywhere else."""
+    if flag is None:
+        return jax.default_backend() == "tpu"
+    return bool(flag)
+
+
 def get_shard_map():
     """``jax.shard_map`` when present (jax >= 0.6), else the experimental
     spelling that 0.4.x ships."""

@@ -1,0 +1,1 @@
+from repro.kernels.bn_act import ops, ref

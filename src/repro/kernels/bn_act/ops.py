@@ -1,0 +1,75 @@
+"""jit'd wrapper for the fused BN affine + ReLU epilogue.
+
+Reshapes ``(..., C)`` to rows, pads C to the 128-lane boundary and rows to
+the block multiple, dispatches :func:`bn_act_2d`, and slices the result
+back.  Differentiable via ``custom_vjp``: the backward pass is plain jnp
+(already fused by XLA into one elementwise sweep) and recomputes nothing —
+residuals are ``(x, a, y)`` and the ReLU mask is recovered from ``y > 0``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.bn_act.kernel import bn_act_2d
+
+
+def _bn_act_fwd_2d(x2, a, b, *, relu, interpret):
+    rows, c = x2.shape
+    cp = max(128, -(-c // 128) * 128)
+    if cp != c:
+        x2p = jnp.pad(x2, ((0, 0), (0, cp - c)))
+        ap = jnp.pad(a, (0, cp - c))
+        bp = jnp.pad(b, (0, cp - c))
+    else:
+        x2p, ap, bp = x2, a, b
+    br = min(256, max(8, 1 << (rows - 1).bit_length()))
+    rp = -(-rows // br) * br
+    if rp != rows:
+        x2p = jnp.pad(x2p, ((0, rp - rows), (0, 0)))
+    y = bn_act_2d(x2p, ap, bp, relu=relu, block_rows=br,
+                  interpret=interpret)
+    return y[:rows, :c]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _bn_act_ad(x2, a, b, relu, interpret):
+    return _bn_act_fwd_2d(x2, a, b, relu=relu, interpret=interpret)
+
+
+def _bn_act_ad_fwd(x2, a, b, relu, interpret):
+    y = _bn_act_fwd_2d(x2, a, b, relu=relu, interpret=interpret)
+    return y, (x2, a, y)
+
+
+def _bn_act_ad_bwd(relu, interpret, res, g):
+    x2, a, y = res
+    g32 = g.astype(jnp.float32)
+    if relu:
+        g32 = jnp.where(y > 0, g32, 0.0)
+    x32 = x2.astype(jnp.float32)
+    dx = (g32 * a.astype(jnp.float32)).astype(x2.dtype)
+    da = jnp.sum(g32 * x32, axis=0).astype(a.dtype)
+    db = jnp.sum(g32, axis=0).astype(a.dtype)
+    return dx, da, db
+
+
+_bn_act_ad.defvjp(_bn_act_ad_fwd, _bn_act_ad_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("relu", "interpret"))
+def bn_act(x, a, b, *, relu=True, interpret=False):
+    """Fused ``relu?(x * a + b)`` over the trailing channel axis.
+
+    x: (..., C) any float dtype; a, b: (C,) f32 folded BN affine.
+    Returns the activated tensor in ``x.dtype``; gradients flow to all
+    three operands (f32 for ``a``/``b``)."""
+    orig_shape = x.shape
+    c = orig_shape[-1]
+    rows = 1
+    for s in orig_shape[:-1]:
+        rows *= s
+    y = _bn_act_ad(x.reshape(rows, c), a, b, relu, interpret)
+    return y.reshape(orig_shape)

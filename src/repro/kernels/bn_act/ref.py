@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the fused BN affine (+ ReLU) epilogue.
+
+The BatchNorm statistics (batch or running, per the CMSD/RMSD policy) are
+computed OUTSIDE this op in f32 and folded into one per-channel affine
+``a = scale / sqrt(var + eps)``, ``b = bias - mean * a`` — the op is the
+remaining elementwise tail that follows every conv in the split ResNet:
+``y = relu?(x * a + b)``, computed in f32 and cast back to ``x.dtype``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def bn_act_ref(x, a, b, *, relu=True):
+    """x: (..., C) any float dtype; a, b: (C,) f32 folded BN affine.
+
+    Returns ``relu(x * a + b)`` (or the bare affine with ``relu=False``)
+    computed in f32, cast to ``x.dtype``."""
+    y = (x.astype(jnp.float32) * a.astype(jnp.float32)
+         + b.astype(jnp.float32))
+    if relu:
+        y = jax.nn.relu(y)
+    return y.astype(x.dtype)

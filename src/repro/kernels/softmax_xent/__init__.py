@@ -1,0 +1,1 @@
+from repro.kernels.softmax_xent import ops, ref

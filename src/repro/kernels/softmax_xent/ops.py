@@ -1,0 +1,93 @@
+"""jit'd wrapper for the fused softmax cross-entropy.
+
+Flattens ``(..., V)`` logits to rows, pads V to the 128-lane boundary and
+rows to the block multiple, and dispatches the fwd/bwd Pallas sweeps via
+``custom_vjp``.  The mean-over-valid-rows reduction stays outside the
+custom rule, so autodiff delivers the per-row scale
+``where(valid, g / denom, 0)`` that neutralizes both ignored and padded
+rows in the backward kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.softmax_xent.kernel import xent_fwd_2d, xent_bwd_2d
+
+IGNORE_LABEL = -100
+
+
+def _pad_dims(rows, v):
+    vp = max(128, -(-v // 128) * 128)
+    br = min(256, max(8, 1 << (rows - 1).bit_length()))
+    rp = -(-rows // br) * br
+    return vp, br, rp
+
+
+def _pad_rows(x2, lab2, vp, rp):
+    rows, v = x2.shape
+    if vp != v:
+        x2 = jnp.pad(x2, ((0, 0), (0, vp - v)))
+    if rp != rows:
+        x2 = jnp.pad(x2, ((0, rp - rows), (0, 0)))
+        lab2 = jnp.pad(lab2, ((0, rp - rows), (0, 0)))
+    return x2, lab2
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _xent_rows(x2, lab2, interpret):
+    """Per-row f32 nll, shape (rows, 1). lab2: (rows, 1) valid class ids."""
+    loss, _ = _dispatch_fwd(x2, lab2, interpret)
+    return loss
+
+
+def _dispatch_fwd(x2, lab2, interpret):
+    rows, v = x2.shape
+    vp, br, rp = _pad_dims(rows, v)
+    xp, lp = _pad_rows(x2, lab2, vp, rp)
+    loss, lse = xent_fwd_2d(xp, lp, v_real=v, block_rows=br,
+                            interpret=interpret)
+    return loss[:rows], lse
+
+
+def _xent_rows_fwd(x2, lab2, interpret):
+    loss, lse = _dispatch_fwd(x2, lab2, interpret)
+    return loss, (x2, lab2, lse)
+
+
+def _xent_rows_bwd(interpret, res, g):
+    x2, lab2, lse = res                           # lse is padded (rp, 1)
+    rows, v = x2.shape
+    vp, br, rp = _pad_dims(rows, v)
+    xp, lp = _pad_rows(x2, lab2, vp, rp)
+    gp = g.astype(jnp.float32)
+    if rp != rows:                                # padded rows: zero scale
+        gp = jnp.pad(gp, ((0, rp - rows), (0, 0)))
+    dx = xent_bwd_2d(xp, lp, lse, gp, v_real=v, block_rows=br,
+                     interpret=interpret)[:rows, :v]
+    return dx, np.zeros(lab2.shape, dtype=jax.dtypes.float0)
+
+
+_xent_rows.defvjp(_xent_rows_fwd, _xent_rows_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("ignore", "interpret"))
+def softmax_xent(logits, labels, *, ignore=IGNORE_LABEL, interpret=False):
+    """Fused drop-in for ``softmax_cross_entropy`` (no z-loss): logits
+    (..., V) any float dtype, labels (...,) int.  Mean f32 nll over
+    non-ignored rows; gradients flow to ``logits`` in its dtype."""
+    v = logits.shape[-1]
+    rows = 1
+    for s in logits.shape[:-1]:
+        rows *= s
+    x2 = logits.reshape(rows, v)
+    lab = labels.reshape(rows)
+    valid = lab != ignore
+    safe = jnp.where(valid, lab, 0).astype(jnp.int32)
+    nll = _xent_rows(x2, safe.reshape(rows, 1), interpret)[:, 0]
+    nll = jnp.where(valid, nll, 0.0)
+    denom = jnp.maximum(jnp.sum(valid), 1)
+    return jnp.sum(nll) / denom

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the fused softmax cross-entropy.
+
+Numerically identical to ``models.common.softmax_cross_entropy`` (without
+the optional z-loss term): f32 logsumexp minus the selected logit, mean
+over non-ignored rows.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+IGNORE_LABEL = -100
+
+
+def softmax_xent_ref(logits, labels, *, ignore=IGNORE_LABEL):
+    """logits: (..., V) any float dtype; labels: (...,) int. Mean f32 nll
+    over non-ignored rows."""
+    logits = logits.astype(jnp.float32)
+    valid = labels != ignore
+    safe = jnp.where(valid, labels, 0)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    loss = jnp.where(valid, lse - ll, 0.0)
+    denom = jnp.maximum(jnp.sum(valid), 1)
+    return jnp.sum(loss) / denom

@@ -63,16 +63,19 @@ def evaluate_lm(spec, cfg, params, *, batches=8, batch=8, seq=64, seed=0):
 def evaluate_paper(*, num_clients=8, epochs=4, batch_size=8, sharded=False,
                    alpha=1.0, pipeline="sync", submesh=None,
                    use_kernel=None, depth=8, width=8, hw=8, lr=0.05,
-                   seed=0):
+                   compute_dtype="float32", seed=0):
     """Train SFPL and SFLv2 through the unified round engine on the same
     data, fleet size, and placement; return accuracy under BOTH test
     protocols (IID and non-IID batches) per scheme, so the head-to-head
     comparison is not confounded by the evaluation protocol. Each scheme
     is evaluated with the BN treatment it trained with (SFPL: CMSD,
-    batch statistics; SFLv2: RMSD, aggregated running statistics)."""
+    batch statistics; SFLv2: RMSD, aggregated running statistics).
+    ``compute_dtype="bfloat16"`` runs both schemes on the mixed-precision
+    ``ComputePolicy`` path (f32 master params and BN statistics)."""
     from repro.core import engine as E
     from repro.core.evaluate import evaluate_split_iid, evaluate_split_noniid
     from repro.data import make_synthetic_cifar, partition_positive_labels
+    from repro.launch.train import make_compute_policy
     from repro.models import resnet as R
     from repro.optim import sgd_momentum
 
@@ -82,7 +85,8 @@ def evaluate_paper(*, num_clients=8, epochs=4, batch_size=8, sharded=False,
         key, num_classes=num_clients, train_per_class=4 * batch_size,
         test_per_class=2 * batch_size, hw=hw)
     data = partition_positive_labels(tx, ty, num_clients)
-    split = E.make_resnet_split(cfg)
+    split = E.make_resnet_split(cfg, policy=make_compute_policy(
+        compute_dtype, use_kernel))
     opt = sgd_momentum(lr, momentum=0.9, weight_decay=5e-4)
 
     def run(scheme):
@@ -161,12 +165,17 @@ def main():
                          "(default: auto — on when the backend is TPU)")
     ap.add_argument("--no-kernel", dest="use_kernel", action="store_false",
                     help="force the Pallas collector bucket kernels off")
+    ap.add_argument("--compute-dtype", dest="compute_dtype",
+                    default="float32", choices=("float32", "bfloat16"),
+                    help="paper mode: split-model compute dtype (bfloat16 "
+                         "= mixed precision with f32 master params)")
     args = ap.parse_args()
     if args.paper:
         rep = evaluate_paper(num_clients=args.clients, epochs=args.epochs,
                              sharded=args.sharded, alpha=args.alpha,
                              pipeline=args.pipeline, submesh=args.submesh,
-                             use_kernel=args.use_kernel)
+                             use_kernel=args.use_kernel,
+                             compute_dtype=args.compute_dtype)
         chance = 100.0 / args.clients
         print(f"matched fleet ({args.clients} clients, "
               f"sharded={args.sharded}, chance {chance:.1f}%):")

@@ -87,16 +87,34 @@ def train_lm(arch_id, *, steps=50, batch=8, seq=64, smoke=True, sfpl=False,
     return losses
 
 
+def make_compute_policy(compute_dtype, use_kernel=None):
+    """``ComputePolicy`` for the launchers' ``--compute-dtype`` knob, or
+    ``None`` at the f32 default (which keeps the original unfused graph
+    bit-for-bit — the parity baseline). Off-TPU the fused kernels run in
+    interpret mode when forced on."""
+    if compute_dtype is None or compute_dtype == "float32":
+        return None
+    from repro.models.common import ComputePolicy
+    return ComputePolicy(compute_dtype=compute_dtype,
+                         use_fused_kernels=use_kernel,
+                         kernel_interpret=jax.default_backend() != "tpu")
+
+
 def train_paper(*, num_clients=8, epochs=4, batch_size=8, sharded=False,
                 use_kernel=None, depth=8, width=8, hw=8, lr=0.05,
                 scheme="sfpl", alpha=1.0, collector="balanced",
-                pipeline="sync", submesh=None, log_every=1):
+                pipeline="sync", submesh=None, compute_dtype="float32",
+                log_every=1):
     """DCML rounds on synthetic CIFAR, one client per class (only positive
     labels). ``scheme`` picks SFPL (Algorithm 1 + 2) or the SFLv2 baseline;
     ``sharded`` runs the same round body on a mesh over all visible devices
     (SFPL: clients + pooled batch sharded, collector as all_to_all in
     ``collector`` mode with flush threshold ``alpha``; SFLv2: the server
-    stream sharded over the batch axis, visitation order preserved)."""
+    stream sharded over the batch axis, visitation order preserved).
+    ``compute_dtype="bfloat16"`` switches the split model onto the
+    mixed-precision ``ComputePolicy`` path: f32 master params and BN
+    stats, bf16 compute and smashed-data exchange, fused Pallas epilogues
+    on TPU."""
     from repro.core import engine as E
     from repro.core.evaluate import evaluate_split_noniid
     from repro.data import make_synthetic_cifar, partition_positive_labels
@@ -109,7 +127,8 @@ def train_paper(*, num_clients=8, epochs=4, batch_size=8, sharded=False,
         key, num_classes=num_clients, train_per_class=4 * batch_size,
         test_per_class=2 * batch_size, hw=hw)
     data = partition_positive_labels(tx, ty, num_clients)
-    split = E.make_resnet_split(cfg)
+    split = E.make_resnet_split(cfg, policy=make_compute_policy(
+        compute_dtype, use_kernel))
     opt = sgd_momentum(lr, momentum=0.9, weight_decay=5e-4)
     st = E.init_dcml_state(key, lambda k: R.init(k, cfg), num_clients,
                            opt, opt)
@@ -134,7 +153,7 @@ def train_paper(*, num_clients=8, epochs=4, batch_size=8, sharded=False,
             print(f"sharded SFPL: {shards}-way data mesh over {n_dev} "
                   f"device(s), collector={collector}, alpha={alpha}, "
                   f"pipeline={pipeline}, submesh={submesh}, "
-                  f"use_kernel={use_kernel}")
+                  f"use_kernel={use_kernel}, compute_dtype={compute_dtype}")
             data_dev = ED.shard_client_data(data, mesh)
             st = ED.shard_dcml_state(st, mesh)
             epoch = ED.make_sfpl_epoch_sharded(
@@ -214,6 +233,12 @@ def main():
                          "the balanced grouped layout qualifies)")
     ap.add_argument("--no-submesh", dest="submesh", action="store_false",
                     help="force the whole-mesh streaming fallback")
+    ap.add_argument("--compute-dtype", dest="compute_dtype",
+                    default="float32", choices=("float32", "bfloat16"),
+                    help="paper mode: split-model compute dtype — bfloat16 "
+                         "keeps f32 master params/BN stats/loss but runs "
+                         "convs, BN+ReLU epilogues, and the smashed-data "
+                         "exchange in bf16 (half the collector payload)")
     ap.add_argument("--clients", type=int, default=8)
     ap.add_argument("--epochs", type=int, default=4)
     args = ap.parse_args()
@@ -224,6 +249,7 @@ def main():
                              scheme=args.scheme, alpha=args.alpha,
                              collector=args.collector,
                              pipeline=args.pipeline, submesh=args.submesh,
+                             compute_dtype=args.compute_dtype,
                              lr=args.lr if args.lr is not None else 0.05)
     else:
         losses = train_lm(args.arch, steps=args.steps, batch=args.batch,

@@ -2,12 +2,58 @@
 from __future__ import annotations
 
 import dataclasses
+import logging
+import os
 from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
+logger = logging.getLogger(__name__)
+
 IGNORE_LABEL = -100
+
+# Read once at import time (an explicit keyword default), NOT inside the
+# traced loss body — an env mutation between traces must not silently
+# change an already-compiled graph's chunking.
+DEFAULT_CE_CHUNKS = int(os.environ.get("REPRO_CE_CHUNKS", "8"))
+
+
+@dataclasses.dataclass(frozen=True)
+class ComputePolicy:
+    """Mixed-precision policy for the split-model compute path.
+
+    ``compute_dtype`` sets the matmul/conv/elementwise dtype for the
+    client forward and the server forward-backward; master params, the
+    BatchNorm statistics (batch AND running — the paper's CMSD/RMSD local
+    inference policies need exact f32 moments), and the loss accumulation
+    always stay f32.  With a non-f32 compute dtype the smashed-data
+    exchange also travels the collector's ``all_to_all`` in that dtype —
+    half the payload bytes for bf16.
+
+    ``use_fused_kernels`` follows the repo-wide ``None`` = auto-on-TPU
+    convention and gates the fused Pallas ``bn_act`` / ``softmax_xent``
+    epilogues; ``kernel_interpret`` forces Pallas interpret mode so the
+    fused path can run (slowly) in CPU CI.
+    """
+    compute_dtype: str = "float32"
+    use_fused_kernels: Optional[bool] = None
+    kernel_interpret: bool = False
+
+    def cdtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+    @property
+    def mixed(self) -> bool:
+        return self.cdtype() != jnp.float32
+
+    def cast(self, x):
+        """Cast an activation into the compute dtype (no-op at f32)."""
+        return x.astype(self.cdtype()) if self.mixed else x
+
+    def fused(self) -> bool:
+        from repro.kernels._compat import auto_use_kernel
+        return auto_use_kernel(self.use_fused_kernels)
 
 
 def softmax_cross_entropy(logits, labels, *, ignore=IGNORE_LABEL,
@@ -26,22 +72,28 @@ def softmax_cross_entropy(logits, labels, *, ignore=IGNORE_LABEL,
     return jnp.sum(loss) / denom
 
 
-def chunked_lm_loss(hidden, labels, unembed_fn, *, chunks=None,
+def chunked_lm_loss(hidden, labels, unembed_fn, *, chunks=DEFAULT_CE_CHUNKS,
                     ignore=IGNORE_LABEL):
     """Cross-entropy over a large vocab without materializing full logits.
 
     ``hidden``: (B, S, d) final-norm output; ``unembed_fn(x) -> logits``.
-    The sequence axis is split into ``chunks``; each chunk's logits + loss
-    are wrapped in jax.checkpoint, so the backward recomputes one chunk's
-    logits at a time — peak logits memory drops by ~``chunks``x. This is a
-    beyond-paper memory optimization recorded in EXPERIMENTS.md §Perf.
+    The sequence axis is split into ``chunks`` (default
+    ``DEFAULT_CE_CHUNKS``, the ``REPRO_CE_CHUNKS`` env value at import
+    time); each chunk's logits + loss are wrapped in jax.checkpoint, so
+    the backward recomputes one chunk's logits at a time — peak logits
+    memory drops by ~``chunks``x. This is a beyond-paper memory
+    optimization recorded in EXPERIMENTS.md §Perf.
     """
-    import os
     if chunks is None:
-        chunks = int(os.environ.get("REPRO_CE_CHUNKS", "8"))
+        chunks = DEFAULT_CE_CHUNKS
     B, S, d = hidden.shape
+    requested = chunks
     while chunks > 1 and S % chunks != 0:
         chunks -= 1
+    if chunks != requested:
+        logger.warning(
+            "chunked_lm_loss: seq len %d not divisible by chunks=%d; "
+            "reduced to %d", S, requested, chunks)
 
     def one(xc, lc):
         logits = unembed_fn(xc).astype(jnp.float32)

@@ -16,7 +16,8 @@ import jax.numpy as jnp
 
 from repro.nn.conv import conv2d_init, conv2d_apply
 from repro.nn.linear import dense_init, dense_apply
-from repro.nn.norm import batchnorm_init, batchnorm_apply
+from repro.nn.norm import (batchnorm_init, batchnorm_apply,
+                           batchnorm_act_apply)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -72,53 +73,85 @@ def init(key, cfg: ResNetConfig):
 
 # --------------------------------------------------------------------------
 # apply
-
-def _bn(p, s, x, *, training, rmsd):
-    return batchnorm_apply(p, s, x, training=training,
-                           use_running_stats=rmsd)
-
-
-def client_apply(params, state, x, *, training=True, rmsd=None):
-    """x: (B, 32, 32, 3) -> smashed data (B, 32, 32, w). Returns (a, state)."""
-    h = conv2d_apply(params["conv1"], x)
-    h, bn1 = _bn(params["bn1"], state["bn1"], h, training=training, rmsd=rmsd)
-    return jax.nn.relu(h), {"bn1": bn1}
+#
+# ``policy`` (a models.common.ComputePolicy or None) selects the compute
+# path.  None keeps the original unfused f32 graph bit-for-bit (the folded
+# BN affine below rounds differently, so parity-pinned callers must stay
+# off it).  With a policy, convs/dense run in ``policy.compute_dtype``,
+# every BN (+ following ReLU, where one exists) collapses into the fused
+# ``batchnorm_act_apply`` epilogue — Pallas ``bn_act`` when
+# ``policy.fused()`` — while the BN statistics stay exact f32.
 
 
-def _block_apply(p, s, x, stride, *, training, rmsd):
+def _cd(policy):
+    return policy.cdtype() if policy is not None and policy.mixed else None
+
+
+def _bn(p, s, x, *, training, rmsd, policy=None, relu=False):
+    if policy is None:
+        y, ns = batchnorm_apply(p, s, x, training=training,
+                                use_running_stats=rmsd)
+        if relu:
+            y = jax.nn.relu(y)
+        return y, ns
+    return batchnorm_act_apply(p, s, x, training=training, relu=relu,
+                               use_running_stats=rmsd,
+                               use_kernel=policy.fused(),
+                               interpret=policy.kernel_interpret)
+
+
+def client_apply(params, state, x, *, training=True, rmsd=None, policy=None):
+    """x: (B, 32, 32, 3) -> smashed data (B, 32, 32, w). Returns (a, state).
+
+    With a mixed ``policy`` the smashed data comes out in the compute
+    dtype — that is the tensor the collector exchanges, at half the f32
+    payload bytes for bf16."""
+    if policy is not None:
+        x = policy.cast(x)
+    h = conv2d_apply(params["conv1"], x, compute_dtype=_cd(policy))
+    h, bn1 = _bn(params["bn1"], state["bn1"], h, training=training,
+                 rmsd=rmsd, policy=policy, relu=True)
+    return h, {"bn1": bn1}
+
+
+def _block_apply(p, s, x, stride, *, training, rmsd, policy=None):
     ns = {}
-    h = conv2d_apply(p["conv1"], x, stride=stride)
-    h, ns["bn1"] = _bn(p["bn1"], s["bn1"], h, training=training, rmsd=rmsd)
-    h = jax.nn.relu(h)
-    h = conv2d_apply(p["conv2"], h)
-    h, ns["bn2"] = _bn(p["bn2"], s["bn2"], h, training=training, rmsd=rmsd)
+    cd = _cd(policy)
+    h = conv2d_apply(p["conv1"], x, stride=stride, compute_dtype=cd)
+    h, ns["bn1"] = _bn(p["bn1"], s["bn1"], h, training=training, rmsd=rmsd,
+                       policy=policy, relu=True)
+    h = conv2d_apply(p["conv2"], h, compute_dtype=cd)
+    h, ns["bn2"] = _bn(p["bn2"], s["bn2"], h, training=training, rmsd=rmsd,
+                       policy=policy)
     if "proj" in p:
-        x = conv2d_apply(p["proj"], x, stride=stride)
+        x = conv2d_apply(p["proj"], x, stride=stride, compute_dtype=cd)
         x, ns["bn_proj"] = _bn(p["bn_proj"], s["bn_proj"], x,
-                               training=training, rmsd=rmsd)
+                               training=training, rmsd=rmsd, policy=policy)
     return jax.nn.relu(h + x), ns
 
 
 def server_apply(params, state, a, cfg: ResNetConfig, *, training=True,
-                 rmsd=None):
+                 rmsd=None, policy=None):
     """a: smashed data (B, 32, 32, w) -> logits. Returns (logits, state)."""
     ns = {}
-    h = a
+    h = a if policy is None else policy.cast(a)
     for stage in range(3):
         for b in range(cfg.blocks_per_stage):
             stride = 2 if (stage > 0 and b == 0) else 1
             name = f"s{stage}b{b}"
             h, ns[name] = _block_apply(params[name], state[name], h, stride,
-                                       training=training, rmsd=rmsd)
+                                       training=training, rmsd=rmsd,
+                                       policy=policy)
     h = jnp.mean(h, axis=(1, 2))
-    return dense_apply(params["fc"], h), ns
+    return dense_apply(params["fc"], h, compute_dtype=_cd(policy)), ns
 
 
-def apply(params, state, x, cfg: ResNetConfig, *, training=True, rmsd=None):
+def apply(params, state, x, cfg: ResNetConfig, *, training=True, rmsd=None,
+          policy=None):
     a, cs = client_apply(params["client"], state["client"], x,
-                         training=training, rmsd=rmsd)
+                         training=training, rmsd=rmsd, policy=policy)
     logits, ss = server_apply(params["server"], state["server"], a, cfg,
-                              training=training, rmsd=rmsd)
+                              training=training, rmsd=rmsd, policy=policy)
     return logits, {"client": cs, "server": ss}
 
 

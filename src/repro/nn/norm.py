@@ -58,6 +58,55 @@ def batchnorm_apply(params, state, x, *, training, momentum=0.9, eps=1e-5,
     return y.astype(x.dtype), new_state
 
 
+def batchnorm_act_apply(params, state, x, *, training, relu=True,
+                        momentum=0.9, eps=1e-5, use_running_stats=None,
+                        use_kernel=False, interpret=False):
+    """BatchNorm + optional ReLU with the elementwise tail fused.
+
+    Same statistics semantics as :func:`batchnorm_apply` (training batch
+    stats + running update; RMSD/CMSD at inference), but the per-channel
+    normalize/scale/shift is folded into one f32 affine
+    ``a = scale / sqrt(var + eps)``, ``b = bias - mean * a`` applied — with
+    the ReLU — in a single sweep over ``x``.  The fold stays differentiable
+    through the batch statistics, so autodiff's stat-gradients match the
+    unfused form; the moments themselves are always computed in f32.
+    ``use_kernel`` routes the sweep through the Pallas ``bn_act`` kernel
+    (``interpret`` for CPU CI); off-kernel the fused jnp path is used.
+
+    NOTE: the folded affine rounds differently from ``batchnorm_apply``'s
+    subtract-then-scale at f32 — callers pinning bit-exact f32 parity
+    (``policy=None`` in the split model) must keep the unfused path.
+    """
+    axes = tuple(range(x.ndim - 1))
+    if training:
+        mean = jnp.mean(x.astype(jnp.float32), axis=axes)
+        var = jnp.var(x.astype(jnp.float32), axis=axes)
+        new_state = {
+            "mean": momentum * state["mean"] + (1 - momentum) * mean,
+            "var": momentum * state["var"] + (1 - momentum) * var,
+            "count": state["count"] + 1.0,
+        }
+    else:
+        rmsd = True if use_running_stats is None else use_running_stats
+        if rmsd:
+            mean, var = state["mean"], state["var"]
+        else:  # CMSD: statistics of the batch under test
+            mean = jnp.mean(x.astype(jnp.float32), axis=axes)
+            var = jnp.var(x.astype(jnp.float32), axis=axes)
+        new_state = state
+    a = params["scale"].astype(jnp.float32) / jnp.sqrt(var + eps)
+    b = params["bias"].astype(jnp.float32) - mean * a
+    if use_kernel:
+        from repro.kernels.bn_act import ops as _ops
+        y = _ops.bn_act(x, a, b, relu=relu, interpret=interpret)
+    else:
+        y32 = x.astype(jnp.float32) * a + b
+        if relu:
+            y32 = jnp.maximum(y32, 0.0)
+        y = y32.astype(x.dtype)
+    return y, new_state
+
+
 # --------------------------------------------------------------------------
 # LayerNorm / RMSNorm
 

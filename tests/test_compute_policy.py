@@ -1,0 +1,162 @@
+"""Mixed-precision ComputePolicy: bf16 vs f32 parity matrix.
+
+The bf16 compute path (f32 master params, bf16 convs/epilogues/exchange,
+f32 BN statistics and loss) must track the f32 trajectory within
+documented tolerances across every collector strategy and flush
+threshold:
+
+  * per-step loss delta <= 1e-2 (the ISSUE-pinned bound — one server
+    update over a ~5k-param ResNet-8 at bf16's ~3 decimal digits);
+  * full-model gradient max-abs delta <= 8e-2 at gradient magnitudes of
+    O(1e-1) (measured ~3.8e-2 at this scale — bf16 rounding of conv
+    activations accumulates over the 8-layer backward — with 2x headroom
+    against seed drift);
+  * master params and grads stay f32, smashed data becomes bf16.
+
+Strategies run in a subprocess at 8 forced host devices (the device count
+must be fixed before jax initializes), like tests/test_engine_dist.py.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+WORKER_DTYPE = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import engine as E
+from repro.core import engine_dist as ED
+from repro.data import make_synthetic_cifar, partition_positive_labels
+from repro.models import resnet as R
+from repro.models.common import ComputePolicy
+from repro.optim import sgd_momentum
+
+V = 8
+cfg = R.ResNetConfig(depth=8, num_classes=V, width=8)
+key = jax.random.PRNGKey(0)
+tx, ty, ex, ey = make_synthetic_cifar(key, num_classes=V,
+                                      train_per_class=16, test_per_class=8,
+                                      hw=8)
+data = partition_positive_labels(tx, ty, V)
+split32 = E.make_resnet_split(cfg)
+split16 = E.make_resnet_split(cfg, policy=ComputePolicy("bfloat16"))
+opt = sgd_momentum(0.05, momentum=0.9, weight_decay=5e-4)
+st0 = E.init_dcml_state(jax.random.PRNGKey(0), lambda k: R.init(k, cfg),
+                        V, opt, opt)
+st0_host = jax.tree_util.tree_map(np.asarray, st0)
+mesh = ED.make_data_mesh(8)
+data_sh = ED.shard_client_data(data, mesh)
+
+def fresh_dense():
+    return jax.tree_util.tree_map(jnp.asarray, st0_host)
+
+def fresh_sharded():
+    return ED.shard_dcml_state(fresh_dense(), mesh)
+
+ke = jax.random.split(jax.random.PRNGKey(1))[1]
+
+# bf16 smashed data crosses the collector in bf16; master params stay f32
+cp0 = jax.tree_util.tree_map(lambda t: t[0], st0["cp"])
+cs0 = jax.tree_util.tree_map(lambda t: t[0], st0["cbn"])
+a16, _ = split16.client_fwd(cp0, cs0, tx[:8])
+assert a16.dtype == jnp.bfloat16, a16.dtype
+assert all(l.dtype == jnp.float32
+           for l in jax.tree_util.tree_leaves(st0["sp"]))
+print("exchange-dtype OK")
+
+# full-model grads: f32 dtype, bounded delta vs the f32 graph
+p0 = {"client": cp0, "server": st0["sp"]}
+s0 = {"client": cs0, "server": st0["sbn"]}
+def gfn(split):
+    return jax.grad(
+        lambda p: split.full_loss(p, s0, tx[:16], ty[:16], True, None)[0])(p0)
+g32, g16 = gfn(split32), gfn(split16)
+gd = max(float(jnp.abs(a - b).max()) for a, b in
+         zip(jax.tree_util.tree_leaves(g32), jax.tree_util.tree_leaves(g16)))
+assert all(l.dtype == jnp.float32
+           for l in jax.tree_util.tree_leaves(g16))
+assert gd <= 8e-2, gd
+print(f"grad-parity OK ({gd:.2e})")
+
+# loss-trajectory matrix: {DenseTake, MeshAllToAll, StreamingAllToAll}
+# x alpha {0.5, 1.0}. The f32 dense trajectory is THE reference per alpha
+# (strategies agree to 1e-4 in f32 per tests/test_engine_dist.py, far
+# below the bf16 bound).
+for alpha in (0.5, 1.0):
+    dense32 = jax.jit(lambda k, s, a=alpha: E.sfpl_epoch(
+        k, s, data, split32, opt, opt, num_clients=V, batch_size=8,
+        alpha=a))
+    _, l_ref = dense32(ke, fresh_dense())
+    l_ref = np.asarray(l_ref)
+
+    dense16 = jax.jit(lambda k, s, a=alpha: E.sfpl_epoch(
+        k, s, data, split16, opt, opt, num_clients=V, batch_size=8,
+        alpha=a))
+    _, l_d = dense16(ke, fresh_dense())
+    runs = {"DenseTake": np.asarray(l_d)}
+
+    sync16 = ED.make_sfpl_epoch_sharded(
+        split16, opt, opt, data_sh, mesh=mesh, num_clients=V, batch_size=8,
+        alpha=alpha, check_capacity=True)
+    _, l_s = sync16(ke, fresh_sharded())
+    runs["MeshAllToAll"] = np.asarray(l_s)
+
+    stream16 = ED.make_sfpl_epoch_sharded(
+        split16, opt, opt, data_sh, mesh=mesh, num_clients=V, batch_size=8,
+        alpha=alpha, collector_pipeline="double_buffered")
+    _, l_t = stream16(ke, fresh_sharded())
+    runs["StreamingAllToAll"] = np.asarray(l_t)
+
+    for name, l in runs.items():
+        d = float(np.abs(l - l_ref).max())
+        assert d <= 1e-2, (name, alpha, d)
+    print(f"alpha={alpha} loss-parity OK")
+print("dtype-matrix OK")
+"""
+
+
+@pytest.mark.parametrize("_", [0])
+def test_bf16_policy_matches_f32_across_strategies(_, tmp_path):
+    script = tmp_path / "worker_dtype.py"
+    script.write_text(WORKER_DTYPE)
+    env = dict(os.environ,
+               PYTHONPATH=os.path.abspath("src") + os.pathsep
+               + os.environ.get("PYTHONPATH", ""))
+    res = subprocess.run([sys.executable, str(script)], env=env,
+                         capture_output=True, text=True, timeout=560)
+    assert res.returncode == 0, res.stdout + res.stderr
+    for token in ("exchange-dtype OK", "grad-parity OK",
+                  "alpha=0.5 loss-parity OK", "alpha=1.0 loss-parity OK",
+                  "dtype-matrix OK"):
+        assert token in res.stdout, res.stdout
+
+
+class _FakeMesh:
+    axis_names = ("data",)
+    devices = np.empty((8,), dtype=object)
+
+
+def test_exchange_bytes_halve_at_bf16():
+    """Plan shapes are dtype-independent, so the bf16 activation exchange
+    is exactly half the f32 wire bytes — for the sync strategy AND the
+    per-group streamed strategy, at full and partial flushes."""
+    from repro.core.round import MeshAllToAll, StreamingAllToAll
+    n, row_elems = 64, 8 * 8 * 8
+    for cls, alpha in ((MeshAllToAll, 1.0), (MeshAllToAll, 0.5),
+                      (StreamingAllToAll, 0.5)):
+        coll = cls(mesh=_FakeMesh(), num_clients=8, alpha=alpha)
+        prep = coll.prepare(coll.make_perm(jax.random.PRNGKey(0), n), n)
+        b32 = coll.exchange_bytes(prep, row_elems, jnp.float32)
+        b16 = coll.exchange_bytes(prep, row_elems, jnp.bfloat16)
+        assert b32 > 0 and b32 == 2 * b16, (cls.__name__, alpha, b32, b16)
+
+
+def test_dense_take_exchange_bytes_zero():
+    from repro.core.round import DenseTake
+    coll = DenseTake(num_clients=8)
+    assert coll.exchange_bytes(None, 512, jnp.float32) == 0

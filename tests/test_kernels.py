@@ -139,6 +139,90 @@ def test_slstm_scan_matches_ref(b, s, hd):
                                rtol=3e-4, atol=3e-4)
 
 
+# --------------------------------------------------------------------------
+# fused BN affine + ReLU epilogue
+
+from repro.kernels.bn_act.ops import bn_act
+from repro.kernels.bn_act.ref import bn_act_ref
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    rows=st.integers(1, 33),
+    c=st.sampled_from([8, 100, 128, 300]),
+    relu=st.booleans(),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+)
+def test_bn_act_matches_ref(rows, c, relu, dtype):
+    key = jax.random.PRNGKey(rows * 13 + c)
+    x = jax.random.normal(key, (rows, c)).astype(dtype)
+    a = jax.random.normal(jax.random.fold_in(key, 1), (c,)) * 0.5 + 1.0
+    b = jax.random.normal(jax.random.fold_in(key, 2), (c,)) * 0.5
+    out = bn_act(x, a, b, relu=relu, interpret=True)
+    ref = bn_act_ref(x, a, b, relu=relu)
+    assert out.dtype == dtype
+    # tight f32 tolerance: the jitted dispatch may contract the affine
+    # into an FMA, so the last ulp can differ from the eager oracle
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_bn_act_grads_match_ref():
+    key = jax.random.PRNGKey(5)
+    x = jax.random.normal(key, (3, 5, 7, 33), jnp.float32)
+    a = jax.random.normal(jax.random.fold_in(key, 1), (33,)) * 0.5 + 1.0
+    b = jax.random.normal(jax.random.fold_in(key, 2), (33,)) * 0.5
+    for relu in (True, False):
+        f_k = lambda *o: jnp.sum(bn_act(*o, relu=relu, interpret=True) ** 2)
+        f_r = lambda *o: jnp.sum(bn_act_ref(*o, relu=relu) ** 2)
+        gk = jax.grad(f_k, argnums=(0, 1, 2))(x, a, b)
+        gr = jax.grad(f_r, argnums=(0, 1, 2))(x, a, b)
+        for u, v in zip(gk, gr):
+            np.testing.assert_allclose(np.asarray(u), np.asarray(v),
+                                       rtol=1e-5, atol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# fused softmax cross-entropy
+
+from repro.kernels.softmax_xent.ops import softmax_xent
+from repro.kernels.softmax_xent.ref import softmax_xent_ref
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    rows=st.integers(1, 40),
+    v=st.sampled_from([2, 10, 128, 200]),
+    ignore_some=st.booleans(),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+)
+def test_softmax_xent_matches_ref(rows, v, ignore_some, dtype):
+    key = jax.random.PRNGKey(rows * 17 + v)
+    logits = (jax.random.normal(key, (rows, v)) * 3).astype(dtype)
+    labels = jax.random.randint(jax.random.fold_in(key, 1), (rows,), 0, v)
+    if ignore_some:
+        labels = labels.at[::3].set(-100)
+    out = softmax_xent(logits, labels, interpret=True)
+    ref = softmax_xent_ref(logits, labels)
+    np.testing.assert_allclose(float(out), float(ref), rtol=1e-5, atol=1e-6)
+
+
+def test_softmax_xent_grads_match_ref():
+    key = jax.random.PRNGKey(9)
+    for dtype, tol in ((jnp.float32, 1e-5), (jnp.bfloat16, 1e-2)):
+        logits = (jax.random.normal(key, (37, 11)) * 3).astype(dtype)
+        labels = jax.random.randint(jax.random.fold_in(key, 1), (37,), 0, 11)
+        labels = labels.at[5].set(-100)
+        gk = jax.grad(
+            lambda z: softmax_xent(z, labels, interpret=True))(logits)
+        gr = jax.grad(lambda z: softmax_xent_ref(z, labels))(logits)
+        assert gk.dtype == dtype
+        np.testing.assert_allclose(np.asarray(gk, np.float32),
+                                   np.asarray(gr, np.float32),
+                                   rtol=tol, atol=tol)
+
+
 def test_xlstm_model_with_pallas_slstm_matches_xla():
     from repro.models import xlstm as X
     key = jax.random.PRNGKey(0)
