@@ -12,7 +12,9 @@ aligned to shard boundaries), the paper-faithful uniform collector mode
 with auto-sized slack, the double-buffered streaming pipeline
 (per-group issue/complete exchanges overlapping the next group's client
 forward), and sub-mesh streaming (each flush group's all_to_all scoped
-to the shard slice owning its rows, with dense zero-slack plans).
+to the shard slice owning its rows, with dense zero-slack plans). A
+final pair of legs folds the same devices into a 2-D ("pod", "data")
+multi-host layout and repeats the sync and pod-local sub-mesh checks.
 
 With ``--compute-dtype bfloat16`` the whole run repeats on the
 mixed-precision ``ComputePolicy`` path (f32 master params, bf16 client
@@ -123,6 +125,36 @@ def main():
             alpha=mode_kw.get("alpha", 1.0)))
         _, l_m = ep_m(keys[0], ED.shard_dcml_state(
             jax.tree_util.tree_map(jnp.asarray, st0_host), mesh))
+        _, l_r = ref_m(keys[0], jax.tree_util.tree_map(jnp.asarray,
+                                                       st0_host))
+        d = float(np.abs(np.asarray(l_m) - np.asarray(l_r)).max())
+        print(f"{label} collector loss delta: {d:.2e}")
+        assert d < tol
+
+    # pod mesh: the same 8 devices folded into a 2-D ("pod", "data")
+    # multi-host layout (2 pods x 4 shards — single-process here; see
+    # tests/test_multihost.py for real process boundaries). Every route
+    # plan works unchanged over the pod-major flattened shard index, and
+    # pod-local flush groups keep their dense sub-mesh exchanges.
+    pod_mesh = ED.make_data_mesh(8, pods=2)
+    print(f"pod mesh: {pod_mesh.devices.shape} over axis "
+          f"{pod_mesh.axis_names}")
+    pod_data = ED.shard_client_data(data, pod_mesh)
+    for mode_kw, label in (
+            ({}, "pod sync"),
+            # alpha=0.5 spans two 32-row groups of 4 shards each — exactly
+            # the per-pod width, so sub-mesh routing stays pod-local
+            ({"alpha": 0.5, "collector_pipeline": "double_buffered",
+              "collector_submesh": True},
+             "pod alpha=0.5 sub-mesh streamed")):
+        ep_m = ED.make_sfpl_epoch_sharded(
+            split, opt, opt, pod_data, mesh=pod_mesh, num_clients=V,
+            batch_size=8, check_capacity=True, **mode_kw)
+        ref_m = jax.jit(lambda k, s: E.sfpl_epoch(
+            k, s, data, split, opt, opt, num_clients=V, batch_size=8,
+            alpha=mode_kw.get("alpha", 1.0)))
+        _, l_m = ep_m(keys[0], ED.shard_dcml_state(
+            jax.tree_util.tree_map(jnp.asarray, st0_host), pod_mesh))
         _, l_r = ref_m(keys[0], jax.tree_util.tree_map(jnp.asarray,
                                                        st0_host))
         d = float(np.abs(np.asarray(l_m) - np.asarray(l_r)).max())

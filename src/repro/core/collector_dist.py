@@ -73,7 +73,13 @@ their own slice and their output rows are masked off by the caller.
 Shape/layout contract (all entry points):
 
   * ``x``: ``(N, ...)`` with dim 0 sharded into ``n_shards`` equal
-    ``b = N // n_shards``-row slabs over the mesh ``axis``;
+    ``b = N // n_shards``-row slabs over the mesh ``axis`` — a bare axis
+    name on the 1-D mesh, or the pod-major name tuple ``("pod", "data")``
+    of the 2-D multi-host mesh, whose flattened (pod-major) device index
+    is the shard index (``mesh_axis_size`` multiplies the named sizes and
+    ``_plan_collective`` scopes each plan's collective: whole-mesh plans
+    run one ``all_to_all`` over the name tuple; pod-local sub-mesh plans
+    run over the inner axis only under ``axis_index_groups``);
   * ``perm``: ``(N,)`` int, replicated; output row ``i`` is ``x[perm[i]]``;
   * slack/capacity: each (src, dst) shard pair exchanges at most
     ``pair_capacity(N, n_shards, slack)`` rows — or exactly
@@ -336,9 +342,22 @@ def uniform_auto_slack(n, num_shards, group_sizes=None, *, probes=16,
                                       margin)
 
 
+def axis_tuple(axis):
+    """Collector mesh axis as a tuple of axis names: the 1-D mesh passes a
+    bare string (``"data"``), the 2-D multi-host mesh a pod-major tuple
+    (``("pod", "data")``) whose flattened index is the shard index."""
+    return (axis,) if isinstance(axis, str) else tuple(axis)
+
+
 def mesh_axis_size(mesh, axis):
-    """Number of shards along ``axis`` of a mesh."""
-    return dict(zip(mesh.axis_names, mesh.devices.shape))[axis]
+    """Number of shards along ``axis`` of a mesh — the product of the named
+    sizes when ``axis`` is a tuple (the flattened pod-major shard count of
+    a 2-D ``("pod", "data")`` collector mesh)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    out = 1
+    for name in axis_tuple(axis):
+        out *= sizes[name]
+    return out
 
 
 def pair_capacity(n, n_shards, slack):
@@ -591,14 +610,49 @@ def _gather_rows(x, idx, *, use_kernel, bucket_shape=None):
 
 
 def _plan_exchange_spec(plan):
-    """(bucket shard count, cap, axis_index_groups) of a plan's collective:
-    whole-mesh plans exchange ``(n_shards, cap)`` buckets over the full
-    axis; sub-mesh plans exchange ``(slice_size, cap)`` buckets under
-    ``axis_index_groups`` confining each collective to its owning slice."""
+    """(bucket shard count, cap) shaping a plan's send/receive buckets:
+    whole-mesh plans exchange ``(n_shards, cap)`` blocks, sub-mesh plans
+    ``(slice_size, cap)`` blocks confined to the owning slice."""
     if plan.slice_size is None:
-        return plan.n_shards, plan.cap, None
-    return (plan.slice_size, plan.cap,
-            submesh_axis_groups(plan.n_shards, plan.slice_size))
+        return plan.n_shards, plan.cap
+    return plan.slice_size, plan.cap
+
+
+def _plan_collective(plan, mesh, axis):
+    """(collective axis name(s), axis_index_groups) of a plan's
+    ``all_to_all`` on ``mesh``.
+
+    Whole-mesh plans run over the full collector axis — the bare axis name
+    on a 1-D mesh, the pod-major name tuple on a 2-D ``("pod", "data")``
+    mesh (participants flatten pod-major, matching the
+    ``P(("pod", "data"))`` dim-0 sharding, so the flattened shard index IS
+    the plan's shard index). Sub-mesh plans confine each flush group's
+    collective to its owning contiguous slice:
+
+      * 1-D mesh: ``axis_index_groups`` partitioning the whole axis into
+        ``slice_size``-shard slices;
+      * 2-D mesh, slice within a pod (``per_pod % slice_size == 0``): the
+        collective runs over the INNER (data) axis only, with
+        ``axis_index_groups`` partitioning ``[0, per_pod)`` — every pod
+        exchanges its own slices simultaneously, no cross-pod traffic;
+      * a slice straddling pods has no grouped-collective expression and
+        must be disqualified upstream (``StreamingAllToAll.submesh_slices``
+        gates it to the whole-mesh fallback) — reaching here raises.
+    """
+    names = axis_tuple(axis)
+    if plan.slice_size is None or plan.slice_size == plan.n_shards:
+        coll = names[0] if len(names) == 1 else names
+        return coll, None
+    if len(names) == 1:
+        return names[0], submesh_axis_groups(plan.n_shards, plan.slice_size)
+    inner = mesh_axis_size(mesh, names[-1])
+    if inner % plan.slice_size:
+        raise ValueError(
+            f"sub-mesh slice of {plan.slice_size} shards straddles the "
+            f"pod boundary (per-pod axis {names[-1]!r} holds {inner} "
+            f"shards) — the layout gate must route this group over the "
+            f"whole-mesh fallback")
+    return names[-1], submesh_axis_groups(inner, plan.slice_size)
 
 
 def plan_payload_bytes(plan, row_elems, itemsize):
@@ -608,7 +662,7 @@ def plan_payload_bytes(plan, row_elems, itemsize):
     whole axis — of ``row_elems``-element rows at ``itemsize`` bytes per
     element. Shapes are dtype-independent, so a bf16 exchange is exactly
     half the f32 bytes at a matched plan."""
-    S, cap, _ = _plan_exchange_spec(plan)
+    S, cap = _plan_exchange_spec(plan)
     return plan.n_shards * S * cap * row_elems * itemsize
 
 
@@ -630,8 +684,11 @@ def plan_exchange(x, plan, *, mesh, axis="data", use_kernel=False,
     A sub-mesh plan (``plan.slice_size = S``) exchanges ``(S, cap)``
     buckets under ``axis_index_groups`` of the slice width instead —
     on a pool-width input only the owning slice's output rows are
-    meaningful; the caller masks the rest."""
-    S, cap, groups = _plan_exchange_spec(plan)
+    meaningful; the caller masks the rest. ``axis`` may be the pod-major
+    name tuple of a 2-D mesh (``_plan_collective`` picks the collective
+    scope)."""
+    S, cap = _plan_exchange_spec(plan)
+    coll_axis, groups = _plan_collective(plan, mesh, axis)
     check = check_capacity and plan.overflow is not None
 
     def local(x_loc, send_idx, recv_idx, *overflow):
@@ -643,7 +700,7 @@ def plan_exchange(x, plan, *, mesh, axis="data", use_kernel=False,
         bucket = _gather_rows(x_loc, send_idx[0], use_kernel=use_kernel,
                               bucket_shape=(S, cap))
         recv = jax.lax.all_to_all(
-            bucket.reshape((S, cap) + x_loc.shape[1:]), axis, 0, 0,
+            bucket.reshape((S, cap) + x_loc.shape[1:]), coll_axis, 0, 0,
             tiled=False, axis_index_groups=groups)
         flat = recv.reshape((S * cap,) + x_loc.shape[1:])
         if plan.may_drop:
@@ -673,7 +730,8 @@ def plan_exchange_issue(x, plan, *, mesh, axis="data", use_kernel=False,
     ``issue`` and ``complete`` — the hook the double-buffered streaming
     collector pipelines client forwards into. A sub-mesh plan's collective
     runs under ``axis_index_groups`` of the owning slice's width."""
-    S, cap, groups = _plan_exchange_spec(plan)
+    S, cap = _plan_exchange_spec(plan)
+    coll_axis, groups = _plan_collective(plan, mesh, axis)
     check = check_capacity and plan.overflow is not None
 
     def local(x_loc, send_idx, *overflow):
@@ -682,7 +740,7 @@ def plan_exchange_issue(x, plan, *, mesh, axis="data", use_kernel=False,
         bucket = _gather_rows(x_loc, send_idx[0], use_kernel=use_kernel,
                               bucket_shape=(S, cap))
         return jax.lax.all_to_all(
-            bucket.reshape((S, cap) + x_loc.shape[1:]), axis, 0, 0,
+            bucket.reshape((S, cap) + x_loc.shape[1:]), coll_axis, 0, 0,
             tiled=False, axis_index_groups=groups)
 
     issue = _shard_map_maybe_norep(
@@ -697,7 +755,7 @@ def plan_exchange_complete(slot, *, mesh, axis="data", use_kernel=False):
     """Second (complete) half: gather the received bucket block of a
     ``plan_exchange_issue`` slot into local output order."""
     recv, plan = slot
-    S, cap, _ = _plan_exchange_spec(plan)
+    S, cap = _plan_exchange_spec(plan)
 
     def local(recv, recv_idx):
         flat = recv.reshape((S * cap,) + recv.shape[2:])

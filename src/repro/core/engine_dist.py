@@ -4,7 +4,10 @@
 update over the pooled smashed-data batch is the scaling bottleneck (the
 same framing as SplitFed, arXiv:2004.12088). The entrypoints here run the
 SAME step bodies as the single-device engine — ``repro.core.round`` — with
-a ``DataMesh`` placement over a ``("data",)`` axis:
+a ``DataMesh`` placement over a ``("data",)`` axis, or over the 2-D
+multi-host ``("pod", "data")`` mesh (``make_data_mesh(..., pods=...)``
+after ``launch.multihost.initialize``), whose pod-major flattened device
+index is the collector shard index:
 
   * SFPL: client params / BN state / optimizer state are sharded on the
     leading client axis; the pooled smashed stack (N*B rows, client-major)
@@ -49,28 +52,68 @@ from repro.core.collector_dist import (group_fits_slabs, mesh_axis_size,
 from repro.core.engine import SplitModel, make_client_update  # noqa: F401
 
 
-def make_data_mesh(num_shards=None, *, axis="data"):
-    """1-D collector mesh over (up to) all local devices."""
+def make_data_mesh(num_shards=None, *, pods=None, axis="data",
+                   pod_axis="pod"):
+    """Collector mesh over (up to) all visible devices.
+
+    ``pods=None`` (default) builds the historical 1-D ``(num_shards,)``
+    mesh over ``axis``. With ``pods`` set, the mesh is the 2-D multi-host
+    topology ``(pods, num_shards // pods)`` over ``(pod_axis, axis)`` —
+    one pod per host process when built after
+    ``launch.multihost.initialize`` (``jax.make_mesh`` orders devices
+    process-major, so pod ``p`` is process ``p``'s local devices). The
+    collector axis of a pod mesh is the name TUPLE ``(pod_axis, axis)``
+    (``collector_axis`` resolves it), flattening pod-major to the shard
+    index.
+
+    >>> make_data_mesh(4, pods=3)
+    Traceback (most recent call last):
+        ...
+    ValueError: pods=3 must be >= 1 and divide num_shards=4 (each pod \
+holds an equal contiguous slice of the flattened shard axis)
+    """
     num_shards = num_shards or len(jax.devices())
-    return jax.make_mesh((num_shards,), (axis,))
+    if pods is None:
+        return jax.make_mesh((num_shards,), (axis,))
+    if pods < 1 or num_shards % pods:
+        raise ValueError(
+            f"pods={pods} must be >= 1 and divide num_shards="
+            f"{num_shards} (each pod holds an equal contiguous slice of "
+            f"the flattened shard axis)")
+    return jax.make_mesh((pods, num_shards // pods), (pod_axis, axis))
 
 
-def shard_dcml_state(st, mesh, *, axis="data"):
+def collector_axis(mesh, *, axis="data", pod_axis="pod"):
+    """The mesh axis (name or pod-major name tuple) the collector shards
+    over: ``(pod_axis, axis)`` on a pod mesh, the bare ``axis`` on the
+    1-D mesh. Every ``axis=None`` entrypoint below resolves through
+    this, so callers never spell the tuple by hand."""
+    return (pod_axis, axis) if pod_axis in mesh.axis_names else axis
+
+
+def _resolve_axis(mesh, axis):
+    return collector_axis(mesh) if axis is None else axis
+
+
+def shard_dcml_state(st, mesh, *, axis=None):
     """Place a ``init_dcml_state`` tree on the mesh: client-stacked leaves
-    sharded on their leading (client) axis, server leaves replicated."""
-    return RD.DataMesh(mesh, axis).place_state(st)
+    sharded on their leading (client) axis, server leaves replicated.
+    ``axis=None`` resolves via ``collector_axis`` (the pod-major tuple on
+    a pod mesh); on a multi-host mesh each process contributes its
+    addressable slice of the replicated host tree."""
+    return RD.DataMesh(mesh, _resolve_axis(mesh, axis)).place_state(st)
 
 
-def shard_client_data(data, mesh, *, axis="data"):
+def shard_client_data(data, mesh, *, axis=None):
     """Shard the per-client dataset {"x": (N, n, ...), "y": (N, n)} over the
-    client axis."""
-    return RD.DataMesh(mesh, axis).place_data(data)
+    client axis (``axis=None``: ``collector_axis`` resolution)."""
+    return RD.DataMesh(mesh, _resolve_axis(mesh, axis)).place_data(data)
 
 
 def check_sfpl_layout(num_clients, batch_size, n_shards, *, alpha=1.0,
                       collector_mode="balanced",
                       collector_pipeline="sync",
-                      collector_submesh=None):
+                      collector_submesh=None, pods=None):
     """Eager validation of the sharded SFPL layout; raises ValueError with
     an actionable message before any device work.
 
@@ -90,6 +133,15 @@ def check_sfpl_layout(num_clients, batch_size, n_shards, *, alpha=1.0,
     the whole-mesh divisibility is moot. ``collector_submesh=True``
     demands qualification and raises otherwise.
 
+    ``pods`` declares the 2-D ``("pod", "data")`` topology the shards run
+    on (``make_data_mesh(n_shards, pods=...)``): it must divide
+    ``n_shards``, and sub-mesh qualification tightens to POD-LOCAL slices
+    — the owning slice must be the whole mesh or divide the per-pod shard
+    count, since a slice straddling pods has no grouped-collective
+    expression. Non-qualifying pod layouts are still valid (the streamed
+    exchange falls back to the probed-slack whole-mesh path, logged), but
+    ``collector_submesh=True`` raises on them.
+
     Returns the flush-group row counts of the accepted layout:
 
     >>> check_sfpl_layout(8, 8, 8)
@@ -99,25 +151,52 @@ def check_sfpl_layout(num_clients, batch_size, n_shards, *, alpha=1.0,
     >>> check_sfpl_layout(8, 8, 8, alpha=0.25, collector_submesh=True,
     ...                   collector_pipeline="double_buffered")
     [16, 16, 16, 16]
+    >>> check_sfpl_layout(8, 8, 8, alpha=0.5, pods=2,
+    ...                   collector_pipeline="double_buffered")
+    [32, 32]
+    >>> check_sfpl_layout(8, 8, 4, alpha=0.5, pods=4,
+    ...                   collector_submesh=True,
+    ...                   collector_pipeline="double_buffered")
+    Traceback (most recent call last):
+        ...
+    ValueError: collector_submesh=True needs collector_mode='balanced' \
+and every flush group covering the same number of whole shard slabs, \
+with the slab divisible by that span — pod-local (the whole mesh, or \
+dividing the 1 shards per pod) when pods=4; got mode='balanced', group \
+sizes [32, 32] over 4 shards (num_clients=8, batch_size=8, alpha=0.5)
     """
     if num_clients % n_shards:
         raise ValueError(
             f"num_clients={num_clients} must divide evenly over "
             f"{n_shards} shards")
+    if pods is not None and (pods < 1 or n_shards % pods):
+        raise ValueError(
+            f"pods={pods} must be >= 1 and divide n_shards={n_shards} "
+            f"(each pod holds an equal contiguous slice of the flattened "
+            f"shard axis)")
     n_pool = num_clients * batch_size
     b = n_pool // n_shards
     rows = [c * batch_size
             for c in C.flush_group_sizes(num_clients, alpha)]
     if collector_pipeline == "double_buffered":
+        slices = submesh_slice_size(n_pool, n_shards, rows)
+        if (slices is not None and pods is not None
+                and slices != n_shards
+                and (n_shards // pods) % slices):
+            slices = None        # slice straddles a pod: whole-mesh path
         sub_ok = (collector_submesh is not False
                   and collector_mode == "balanced"
-                  and submesh_slice_size(n_pool, n_shards, rows)
-                  is not None)
+                  and slices is not None)
         if collector_submesh and not sub_ok:
+            pod_req = ("" if pods is None else
+                       f" — pod-local (the whole mesh, or dividing the "
+                       f"{n_shards // pods} shards per pod) when "
+                       f"pods={pods}")
             raise ValueError(
                 f"collector_submesh=True needs collector_mode='balanced' "
                 f"and every flush group covering the same number of whole "
-                f"shard slabs, with the slab divisible by that span; got "
+                f"shard slabs, with the slab divisible by that span"
+                f"{pod_req}; got "
                 f"mode={collector_mode!r}, group sizes {rows} over "
                 f"{n_shards} shards (num_clients={num_clients}, "
                 f"batch_size={batch_size}, alpha={alpha})")
@@ -156,12 +235,17 @@ def check_sfpl_layout(num_clients, batch_size, n_shards, *, alpha=1.0,
 
 def fit_shards(num_clients, batch_size, *, scheme="sfpl", alpha=1.0,
                collector_mode="balanced", collector_pipeline="sync",
-               collector_submesh=None, max_shards=None):
+               collector_submesh=None, pods=None, max_shards=None):
     """Largest shard count (up to the visible devices) the layout supports
     — shared by the launch drivers so every entrypoint degrades to a
-    smaller mesh instead of crashing on indivisible configurations."""
+    smaller mesh instead of crashing on indivisible configurations. With
+    ``pods`` set, only shard counts divisible into ``pods`` equal pod
+    slices are considered (``make_data_mesh(s, pods=pods)`` must be
+    buildable), and sub-mesh qualification is checked pod-locally."""
     max_shards = max_shards or len(jax.devices())
     for s in range(max_shards, 0, -1):
+        if pods is not None and s % pods:
+            continue
         if scheme == "sflv2":
             if batch_size % s == 0:
                 return s
@@ -170,17 +254,20 @@ def fit_shards(num_clients, batch_size, *, scheme="sfpl", alpha=1.0,
             check_sfpl_layout(num_clients, batch_size, s, alpha=alpha,
                               collector_mode=collector_mode,
                               collector_pipeline=collector_pipeline,
-                              collector_submesh=collector_submesh)
+                              collector_submesh=collector_submesh,
+                              pods=pods)
             return s
         except ValueError:
             continue
-    return 1
+    # minimal fallback: one shard per pod (a (pods, 1) mesh), one shard
+    # total on the 1-D mesh
+    return pods if pods else 1
 
 
 def sfpl_epoch_sharded(key, st, data, split: SplitModel, opt_c, opt_s, *,
                        mesh, num_clients, batch_size, bn_mode="cmsd",
                        alpha=1.0, use_kernel=None, slack=None,
-                       check_capacity=False, axis="data",
+                       check_capacity=False, axis=None,
                        collector_mode="balanced",
                        collector_pipeline="sync", stream_slack=None,
                        collector_submesh=None):
@@ -218,12 +305,21 @@ def sfpl_epoch_sharded(key, st, data, split: SplitModel, opt_c, opt_s, *,
     ``bucket_permute``/``unbucket_permute`` kernels on TPU — where the
     one-pass HBM copies win — and keeps the jnp gathers elsewhere;
     pass True/False to force.
+
+    ``axis=None`` resolves via ``collector_axis``: the bare ``"data"``
+    name on a 1-D mesh, the pod-major ``("pod", "data")`` tuple on a pod
+    mesh (``make_data_mesh(..., pods=...)``), where the layout check runs
+    with the mesh's pod count so sub-mesh routing only claims pod-local
+    slices.
     """
+    axis = _resolve_axis(mesh, axis)
+    names = (axis,) if isinstance(axis, str) else tuple(axis)
     n_shards = mesh_axis_size(mesh, axis)
+    pods = (mesh_axis_size(mesh, names[0]) if len(names) > 1 else None)
     check_sfpl_layout(num_clients, batch_size, n_shards, alpha=alpha,
                       collector_mode=collector_mode,
                       collector_pipeline=collector_pipeline,
-                      collector_submesh=collector_submesh)
+                      collector_submesh=collector_submesh, pods=pods)
     placement = RD.DataMesh(mesh, axis)
     return RD.sfpl_round(
         key, st, data, split, opt_c, opt_s, num_clients=num_clients,
@@ -238,17 +334,22 @@ def sfpl_epoch_sharded(key, st, data, split: SplitModel, opt_c, opt_s, *,
 def make_sfpl_epoch_sharded(split: SplitModel, opt_c, opt_s, data, *,
                             mesh, num_clients, batch_size, **kw):
     """Jitted hot loop: ``(key, st) -> (st, losses)`` with the carried state
-    donated, so the sharded param/opt buffers are reused in place."""
-    def epoch(key, st):
+    donated, so the sharded param/opt buffers are reused in place.
+
+    ``data`` is bound as a jit ARGUMENT, not a closure: multi-host global
+    arrays span non-addressable devices and jax refuses to close over
+    them, while passing them through the jit boundary is fine."""
+    def epoch(key, st, data):
         return sfpl_epoch_sharded(key, st, data, split, opt_c, opt_s,
                                   mesh=mesh, num_clients=num_clients,
                                   batch_size=batch_size, **kw)
-    return jax.jit(epoch, donate_argnums=(1,))
+    jitted = jax.jit(epoch, donate_argnums=(1,))
+    return lambda key, st: jitted(key, st, data)
 
 
 def sflv2_epoch_sharded(key, st, data, split: SplitModel, opt_c, opt_s, *,
                         mesh, num_clients, batch_size, aggregate_bn=True,
-                        axis="data"):
+                        axis=None):
     """Drop-in sharded replacement for ``engine.sflv2_epoch``: the server
     stream is sharded over the per-client batch axis while the sequential
     client-visitation order is preserved bit-for-bit. State and data stay
@@ -261,6 +362,7 @@ def sflv2_epoch_sharded(key, st, data, split: SplitModel, opt_c, opt_s, *,
     per-client set (contrast ``sfpl_epoch_sharded``); ``batch_size`` must
     divide over the mesh's ``axis``. Returns ``(st, losses)`` with
     ``losses`` of shape ``(N, n // batch_size)`` in visitation order."""
+    axis = _resolve_axis(mesh, axis)
     n_shards = mesh_axis_size(mesh, axis)
     if batch_size % n_shards:
         raise ValueError(
@@ -274,9 +376,12 @@ def sflv2_epoch_sharded(key, st, data, split: SplitModel, opt_c, opt_s, *,
 
 def make_sflv2_epoch_sharded(split: SplitModel, opt_c, opt_s, data, *,
                              mesh, num_clients, batch_size, **kw):
-    """Jitted hot loop: ``(key, st) -> (st, losses)``, state donated."""
-    def epoch(key, st):
+    """Jitted hot loop: ``(key, st) -> (st, losses)``, state donated;
+    ``data`` rides through the jit boundary as an argument (see
+    ``make_sfpl_epoch_sharded``)."""
+    def epoch(key, st, data):
         return sflv2_epoch_sharded(key, st, data, split, opt_c, opt_s,
                                    mesh=mesh, num_clients=num_clients,
                                    batch_size=batch_size, **kw)
-    return jax.jit(epoch, donate_argnums=(1,))
+    jitted = jax.jit(epoch, donate_argnums=(1,))
+    return lambda key, st: jitted(key, st, data)

@@ -59,21 +59,25 @@ never the visitation loop.
 from __future__ import annotations
 
 import dataclasses
+import logging
 from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import collector as C
 from repro.core.bn_policy import fedavg, aggregate_bn_state
 from repro.core.collector_dist import (
-    balanced_stream_slack, build_route_plans, build_submesh_route_plans,
-    exact_pair_cap, make_grouped_balanced_perm, mesh_axis_size,
-    pair_capacity, plan_exchange, plan_exchange_complete,
+    axis_tuple, balanced_stream_slack, build_route_plans,
+    build_submesh_route_plans, exact_pair_cap, make_grouped_balanced_perm,
+    mesh_axis_size, pair_capacity, plan_exchange, plan_exchange_complete,
     plan_exchange_issue, plan_payload_bytes, plan_shuffle,
     submesh_slice_size, uniform_auto_slack)
 from repro.kernels._compat import auto_use_kernel
+
+logger = logging.getLogger(__name__)
 
 
 class PreparedPerm(NamedTuple):
@@ -120,12 +124,27 @@ class SingleDevice:
 SINGLE = SingleDevice()
 
 
+def _global_put(a, sharding):
+    """Place a host array under ``sharding`` — ``jax.device_put`` when this
+    process addresses every device of the mesh, else assembled from
+    per-device host slices (each process of a multi-host mesh holds the
+    full replicated host value, so any index of it is addressable)."""
+    if sharding.is_fully_addressable:
+        return jax.device_put(a, sharding)
+    return jax.make_array_from_callback(
+        np.shape(a), sharding, lambda idx: np.asarray(a)[idx])
+
+
 @dataclasses.dataclass(frozen=True)
 class DataMesh:
-    """A 1-D device mesh: client-stacked state and the pooled smashed batch
-    are sharded over ``axis``; server state stays replicated."""
+    """A device mesh: client-stacked state and the pooled smashed batch are
+    sharded over ``axis``; server state stays replicated. ``axis`` is a
+    bare axis name on the 1-D ``("data",)`` mesh, or the pod-major name
+    tuple ``("pod", "data")`` of the 2-D multi-host mesh — dim 0 then
+    shards jointly over both axes, pod-major, so the flattened device
+    index is the collector shard index."""
     mesh: object
-    axis: str = "data"
+    axis: object = "data"
 
     @property
     def n_shards(self):
@@ -137,21 +156,21 @@ class DataMesh:
         shard = NamedSharding(self.mesh, P(self.axis))
         repl = NamedSharding(self.mesh, P())
         put = lambda t, s: jax.tree_util.tree_map(
-            lambda a: jax.device_put(a, s), t)
+            lambda a: _global_put(a, s), t)
         return dict(
             st,
             cp=put(st["cp"], shard), cbn=put(st["cbn"], shard),
             copt=put(st["copt"], shard),
             sp=put(st["sp"], repl), sbn=put(st["sbn"], repl),
             sopt=put(st["sopt"], repl),
-            step=jax.device_put(st["step"], repl))
+            step=_global_put(st["step"], repl))
 
     def place_data(self, data):
         """Shard the per-client dataset {"x": (N, n, ...), "y": (N, n)} over
         the client axis."""
         shard = NamedSharding(self.mesh, P(self.axis))
         return jax.tree_util.tree_map(
-            lambda a: jax.device_put(a, shard), data)
+            lambda a: _global_put(a, shard), data)
 
     def constrain_batch(self, tree):
         """Shard the leading (batch) axis of every leaf — the SFLv2 server
@@ -236,7 +255,7 @@ class MeshAllToAll:
     """
     mesh: object
     num_clients: int
-    axis: str = "data"
+    axis: object = "data"
     mode: str = "balanced"
     alpha: float = 1.0
     slack: Optional[float] = None
@@ -391,7 +410,12 @@ class StreamingAllToAll(MeshAllToAll):
         """Shards per owning slice when sub-mesh routing is active for a
         ``n``-row pool, else ``None`` (auto-resolution of the ``submesh``
         knob). ``submesh=True`` raises on non-qualifying layouts with the
-        disqualifying condition named."""
+        disqualifying condition named. On a 2-D ``("pod", "data")`` mesh a
+        qualifying slice must additionally stay POD-LOCAL (whole mesh, or
+        dividing the per-pod shard count): a slice straddling pods has no
+        grouped-collective expression, so those layouts fall back to the
+        probed-slack whole-mesh exchange — logged, never silently
+        dropped."""
         if self.submesh is False:
             return None
         reason, slices = None, None
@@ -404,14 +428,27 @@ class StreamingAllToAll(MeshAllToAll):
             reason = ("an explicit slack/stream_slack override forces the "
                       "slack-buffered whole-mesh plan shape")
         else:
-            slices = submesh_slice_size(
-                n, mesh_axis_size(self.mesh, self.axis),
-                self.group_rows(n))
+            n_shards = mesh_axis_size(self.mesh, self.axis)
+            slices = submesh_slice_size(n, n_shards, self.group_rows(n))
             if slices is None:
                 reason = ("every flush group must cover the same number "
                           "of whole shard slabs, with the slab divisible "
                           "by that span (collector_dist."
                           "submesh_slice_size)")
+            else:
+                names = axis_tuple(self.axis)
+                if len(names) > 1 and slices != n_shards:
+                    inner = mesh_axis_size(self.mesh, names[-1])
+                    if inner % slices:
+                        reason = (
+                            f"a {slices}-shard slice straddles the pod "
+                            f"boundary (per-pod axis {names[-1]!r} holds "
+                            f"{inner} shards) — cross-pod flush groups "
+                            f"take the probed-slack whole-mesh exchange")
+                        slices = None
+                        if not self.submesh:
+                            logger.warning(
+                                "sub-mesh routing disabled: %s", reason)
         if slices is None and self.submesh:
             raise ValueError(
                 f"collector_submesh=True but the layout does not qualify "

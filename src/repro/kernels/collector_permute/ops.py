@@ -83,3 +83,48 @@ def _permute_bwd(interpret, perm, g):
 
 
 collector_permute_ad.defvjp(_permute_fwd, _permute_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def bucket_permute_ad(x, idx, interpret=False):
+    """Differentiable ``bucket_permute``. The backward pass is a plain jnp
+    scatter-add (``gx[idx[s, r]] += g[s*cap + r]``) rather than the
+    kernel: the VJP of a gather is only itself a gather when ``idx`` is a
+    permutation, and the index map isn't statically known to be one.
+    Route-plan production gradients never come through here — they ride
+    the precomputed inverse plan — so this exists for direct AD through
+    the kernelized gathers (tests, ad-hoc pipelines)."""
+    return bucket_permute(x, idx, interpret=interpret)
+
+
+def _bucket_fwd(x, idx, interpret):
+    return bucket_permute(x, idx, interpret=interpret), (idx, x.shape)
+
+
+def _bucket_bwd(interpret, res, g):
+    idx, shape = res
+    gx = jnp.zeros(shape, g.dtype)
+    return gx.at[idx.reshape(-1)].add(g), None
+
+
+bucket_permute_ad.defvjp(_bucket_fwd, _bucket_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def unbucket_permute_ad(x, idx, interpret=False):
+    """Differentiable ``unbucket_permute`` (same contract and caveats as
+    ``bucket_permute_ad``: jnp scatter-add backward)."""
+    return unbucket_permute(x, idx, interpret=interpret)
+
+
+def _unbucket_fwd(x, idx, interpret):
+    return unbucket_permute(x, idx, interpret=interpret), (idx, x.shape)
+
+
+def _unbucket_bwd(interpret, res, g):
+    idx, shape = res
+    gx = jnp.zeros(shape, g.dtype)
+    return gx.at[idx].add(g), None
+
+
+unbucket_permute_ad.defvjp(_unbucket_fwd, _unbucket_bwd)

@@ -61,7 +61,7 @@ def evaluate_lm(spec, cfg, params, *, batches=8, batch=8, seq=64, seed=0):
 
 
 def evaluate_paper(*, num_clients=8, epochs=4, batch_size=8, sharded=False,
-                   alpha=1.0, pipeline="sync", submesh=None,
+                   alpha=1.0, pipeline="sync", submesh=None, pods=None,
                    use_kernel=None, depth=8, width=8, hw=8, lr=0.05,
                    compute_dtype="float32", seed=0):
     """Train SFPL and SFLv2 through the unified round engine on the same
@@ -98,8 +98,8 @@ def evaluate_paper(*, num_clients=8, epochs=4, batch_size=8, sharded=False,
             shards = ED.fit_shards(num_clients, batch_size, scheme=scheme,
                                    alpha=alpha,
                                    collector_pipeline=pipeline,
-                                   collector_submesh=submesh)
-            mesh = ED.make_data_mesh(shards)
+                                   collector_submesh=submesh, pods=pods)
+            mesh = ED.make_data_mesh(shards, pods=pods)
             if scheme == "sfpl":
                 st = ED.shard_dcml_state(st, mesh)
                 epoch = ED.make_sfpl_epoch_sharded(
@@ -157,6 +157,9 @@ def main():
                     default=None,
                     help="force sub-mesh streaming on (default: auto when "
                          "the balanced grouped layout qualifies)")
+    ap.add_argument("--pods", type=int, default=None,
+                    help="split the sharded mesh into this many pods (the "
+                         "2-D ('pod', 'data') multi-host topology)")
     ap.add_argument("--no-submesh", dest="submesh", action="store_false",
                     help="force the whole-mesh streaming fallback")
     ap.add_argument("--use-kernel", dest="use_kernel", action="store_true",
@@ -174,7 +177,7 @@ def main():
         rep = evaluate_paper(num_clients=args.clients, epochs=args.epochs,
                              sharded=args.sharded, alpha=args.alpha,
                              pipeline=args.pipeline, submesh=args.submesh,
-                             use_kernel=args.use_kernel,
+                             pods=args.pods, use_kernel=args.use_kernel,
                              compute_dtype=args.compute_dtype)
         chance = 100.0 / args.clients
         print(f"matched fleet ({args.clients} clients, "

@@ -1,0 +1,87 @@
+"""Multi-host (multi-process) runtime wiring for the pod collector mesh.
+
+One JAX process per pod: ``initialize`` joins the distributed runtime,
+``make_pod_mesh`` builds the 2-D ``("pod", "data")`` collector mesh
+(``engine_dist.make_data_mesh`` with ``pods`` defaulting to the process
+count — ``jax.make_mesh`` orders devices process-major, so pod ``p`` IS
+process ``p``'s local devices), and the epoch entrypoints run unchanged:
+every process executes the same program over the same replicated host
+inputs (keys, perms, probed slacks are derived identically everywhere),
+with state placed by ``engine_dist.shard_dcml_state`` — each process
+contributes the addressable slice of its own pod.
+
+Typical worker (run once per host, e.g. under tests/_multihost.py):
+
+    from repro.launch import multihost
+    multihost.initialize("10.0.0.1:8476", num_processes=2, process_id=pid)
+    mesh = multihost.make_pod_mesh()          # (pods, local_device_count)
+    st = ED.shard_dcml_state(st0, mesh)
+    epoch = ED.make_sfpl_epoch_sharded(..., mesh=mesh, ...)
+
+Functions here never touch jax device state at import time (same contract
+as ``launch.mesh``).
+"""
+from __future__ import annotations
+
+import logging
+import os
+
+import jax
+import numpy as np
+
+from repro.core import engine_dist as ED
+
+logger = logging.getLogger(__name__)
+
+
+def initialize(coordinator_address, num_processes, process_id, *,
+               local_devices=None, cpu_collectives="gloo"):
+    """Join the JAX distributed runtime — call before ANY other jax use.
+
+    ``local_devices`` forces this process's CPU device count via
+    ``XLA_FLAGS`` (appended only if the flag is not already set — the
+    backend reads it once, so it must land before first device use).
+    ``cpu_collectives`` selects the CPU cross-process collective
+    implementation: the default backend cannot run multi-process
+    collectives at all, so "gloo" is the working default. It is a config
+    flag, NOT an environment variable — the env spelling is silently
+    ignored, which is why this helper sets it explicitly."""
+    if (local_devices is not None
+            and "xla_force_host_platform_device_count"
+            not in os.environ.get("XLA_FLAGS", "")):
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={local_devices}"
+        ).strip()
+    jax.config.update("jax_cpu_collectives_implementation", cpu_collectives)
+    jax.distributed.initialize(coordinator_address=coordinator_address,
+                               num_processes=num_processes,
+                               process_id=process_id)
+    logger.info("joined distributed runtime: process %d/%d at %s",
+                process_id, num_processes, coordinator_address)
+
+
+def make_pod_mesh(num_shards=None, *, pods=None, axis="data",
+                  pod_axis="pod"):
+    """The 2-D ``(pods, num_shards // pods)`` collector mesh over
+    ``(pod_axis, axis)``; ``pods`` defaults to ``jax.process_count()``
+    (one pod per host process) and ``num_shards`` to every global
+    device."""
+    pods = jax.process_count() if pods is None else pods
+    num_shards = num_shards or len(jax.devices())
+    return ED.make_data_mesh(num_shards, pods=pods, axis=axis,
+                             pod_axis=pod_axis)
+
+
+def host_value(x):
+    """Fetch a (possibly non-fully-addressable) array to every host as
+    numpy: single-process arrays convert directly, multi-host replicated
+    arrays read any local copy, and multi-host sharded arrays are
+    allgathered (every process gets the full pod-major value)."""
+    try:
+        return np.asarray(x)
+    except RuntimeError:
+        if getattr(x, "is_fully_replicated", False):
+            return np.asarray(x.addressable_data(0))
+        from jax.experimental import multihost_utils
+        return np.asarray(multihost_utils.process_allgather(x, tiled=True))

@@ -103,8 +103,8 @@ def make_compute_policy(compute_dtype, use_kernel=None):
 def train_paper(*, num_clients=8, epochs=4, batch_size=8, sharded=False,
                 use_kernel=None, depth=8, width=8, hw=8, lr=0.05,
                 scheme="sfpl", alpha=1.0, collector="balanced",
-                pipeline="sync", submesh=None, compute_dtype="float32",
-                log_every=1):
+                pipeline="sync", submesh=None, pods=None,
+                compute_dtype="float32", log_every=1):
     """DCML rounds on synthetic CIFAR, one client per class (only positive
     labels). ``scheme`` picks SFPL (Algorithm 1 + 2) or the SFLv2 baseline;
     ``sharded`` runs the same round body on a mesh over all visible devices
@@ -114,7 +114,10 @@ def train_paper(*, num_clients=8, epochs=4, batch_size=8, sharded=False,
     ``compute_dtype="bfloat16"`` switches the split model onto the
     mixed-precision ``ComputePolicy`` path: f32 master params and BN
     stats, bf16 compute and smashed-data exchange, fused Pallas epilogues
-    on TPU."""
+    on TPU. ``pods`` splits the sharded SFPL mesh into the 2-D
+    ``("pod", "data")`` multi-host topology (one pod per host process
+    under ``launch.multihost.initialize``; also works single-process for
+    schedule parity testing)."""
     from repro.core import engine as E
     from repro.core.evaluate import evaluate_split_noniid
     from repro.data import make_synthetic_cifar, partition_positive_labels
@@ -148,11 +151,11 @@ def train_paper(*, num_clients=8, epochs=4, batch_size=8, sharded=False,
             shards = ED.fit_shards(num_clients, batch_size, alpha=alpha,
                                    collector_mode=collector,
                                    collector_pipeline=pipeline,
-                                   collector_submesh=submesh)
-            mesh = ED.make_data_mesh(shards)
+                                   collector_submesh=submesh, pods=pods)
+            mesh = ED.make_data_mesh(shards, pods=pods)
             print(f"sharded SFPL: {shards}-way data mesh over {n_dev} "
                   f"device(s), collector={collector}, alpha={alpha}, "
-                  f"pipeline={pipeline}, submesh={submesh}, "
+                  f"pipeline={pipeline}, submesh={submesh}, pods={pods}, "
                   f"use_kernel={use_kernel}, compute_dtype={compute_dtype}")
             data_dev = ED.shard_client_data(data, mesh)
             st = ED.shard_dcml_state(st, mesh)
@@ -231,6 +234,10 @@ def main():
                          "exchange is a dense zero-slack collective over "
                          "its owning shard slice (default: auto — on when "
                          "the balanced grouped layout qualifies)")
+    ap.add_argument("--pods", type=int, default=None,
+                    help="split the sharded SFPL mesh into this many pods "
+                         "(the 2-D ('pod', 'data') multi-host topology; "
+                         "default: single-pod 1-D mesh)")
     ap.add_argument("--no-submesh", dest="submesh", action="store_false",
                     help="force the whole-mesh streaming fallback")
     ap.add_argument("--compute-dtype", dest="compute_dtype",
@@ -249,6 +256,7 @@ def main():
                              scheme=args.scheme, alpha=args.alpha,
                              collector=args.collector,
                              pipeline=args.pipeline, submesh=args.submesh,
+                             pods=args.pods,
                              compute_dtype=args.compute_dtype,
                              lr=args.lr if args.lr is not None else 0.05)
     else:

@@ -1,0 +1,106 @@
+"""Localhost multi-process harness for the pod collector mesh.
+
+``run_multiprocess(fn, num_processes=N, devices_per_process=D)`` spawns N
+fresh Python processes on this machine, joins them into ONE JAX
+distributed runtime through the production wiring
+(``repro.launch.multihost.initialize`` against a coordinator on a free
+localhost port, each process's CPU split into D forced XLA devices), runs
+the cloudpickled ``fn`` in every process, and returns the per-process
+results — so a test can pin a genuinely cross-process sharded epoch
+against an oracle and compare what every host saw.
+
+Contract for ``fn``: a zero-argument callable, cloudpickle-serializable
+(keep its imports INSIDE the body — by-value pickling then ships no
+module state), returning a pickleable value (numpy, not jax arrays). It
+runs after ``multihost.initialize``, so ``jax.process_index()`` /
+``jax.process_count()`` and ``multihost.make_pod_mesh()`` are live.
+Every process must execute the same collective sequence or the runtime
+deadlocks — derive all randomness from fixed seeds.
+
+The child sets ``XLA_FLAGS`` / ``JAX_PLATFORMS`` BEFORE importing jax
+(the backend reads the forced device count once) and CPU cross-process
+collectives run on gloo (``multihost.initialize`` default — the stock
+CPU backend cannot run multi-process collectives at all).
+"""
+import os
+import pickle
+import socket
+import subprocess
+import sys
+import tempfile
+from pathlib import Path
+
+_SRC = str(Path(__file__).resolve().parent.parent / "src")
+
+_CHILD = r"""
+import os, pickle, sys
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=%(ndev)d")
+os.environ["JAX_PLATFORMS"] = "cpu"
+pid = int(sys.argv[1])
+from repro.launch import multihost
+multihost.initialize("127.0.0.1:%(port)d", num_processes=%(nproc)d,
+                     process_id=pid)
+with open(%(payload)r, "rb") as f:
+    fn = pickle.load(f)
+result = fn()
+with open(%(outdir)r + "/out-%%d.pkl" %% pid, "wb") as f:
+    pickle.dump(result, f)
+print("MH-OK", pid, flush=True)
+"""
+
+
+def free_port():
+    with socket.socket() as s:
+        s.bind(("127.0.0.1", 0))
+        return s.getsockname()[1]
+
+
+def run_multiprocess(fn, *, num_processes=2, devices_per_process=4,
+                     timeout=1200):
+    """Run ``fn`` in ``num_processes`` coordinated localhost JAX processes;
+    returns ``[fn() result of process 0, ..., of process N-1]``. Raises
+    with both processes' combined output on any nonzero exit."""
+    import cloudpickle
+    # pickle the WHOLE function by value: test modules are importable from
+    # the parent's rootdir but not from the child, and by-reference
+    # pickling would make the child re-import them (and their jax state)
+    mod = sys.modules.get(getattr(fn, "__module__", None))
+    if mod is not None and mod.__name__ != "__main__":
+        cloudpickle.register_pickle_by_value(mod)
+    with tempfile.TemporaryDirectory() as tmp:
+        payload = os.path.join(tmp, "fn.pkl")
+        with open(payload, "wb") as f:
+            f.write(cloudpickle.dumps(fn))
+        child = os.path.join(tmp, "child.py")
+        with open(child, "w") as f:
+            f.write(_CHILD % dict(ndev=devices_per_process,
+                                  port=free_port(), nproc=num_processes,
+                                  payload=payload, outdir=tmp))
+        env = dict(os.environ)
+        env["PYTHONPATH"] = os.pathsep.join(
+            [_SRC] + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else []))
+        procs = [subprocess.Popen(
+            [sys.executable, child, str(pid)], env=env, text=True,
+            stdout=subprocess.PIPE, stderr=subprocess.STDOUT)
+            for pid in range(num_processes)]
+        outs = []
+        try:
+            for p in procs:
+                out, _ = p.communicate(timeout=timeout)
+                outs.append(out)
+        finally:
+            for p in procs:
+                if p.poll() is None:
+                    p.kill()
+        report = "\n".join(f"--- process {i} (exit {p.returncode}) ---\n"
+                           f"{out}" for i, (p, out)
+                           in enumerate(zip(procs, outs)))
+        assert all(p.returncode == 0 for p in procs), report
+        assert all(f"MH-OK {i}" in outs[i]
+                   for i in range(num_processes)), report
+        results = []
+        for pid in range(num_processes):
+            with open(os.path.join(tmp, f"out-{pid}.pkl"), "rb") as f:
+                results.append(pickle.load(f))
+        return results

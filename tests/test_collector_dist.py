@@ -271,3 +271,85 @@ def test_pair_load_host_helpers():
         assert_pair_capacity(adv, s, slack=1.0)
     # generous slack passes
     assert_pair_capacity(adv, s, slack=float(s))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 9999), tail=st.sampled_from(["slab", "in_slab"]))
+def test_grouped_perm_seals_mixed_layouts(seed, tail):
+    """Sealing is a property of EVERY valid flush layout, not just the
+    uniform-span ones: a multi-slab balanced group followed by
+    single-slab or in-slab groups stays sealed under arbitrary keys, and
+    no row ever routes across a group boundary."""
+    import jax
+    from repro.core.collector_dist import (make_grouped_balanced_perm,
+                                           pair_load)
+    num_shards, b = 4, 8
+    n = num_shards * b
+    rows = [2 * b] + ([b, b] if tail == "slab" else [b // 2] * 4)
+    perm = np.asarray(make_grouped_balanced_perm(
+        jax.random.PRNGKey(seed), n, num_shards, rows))
+    assert sorted(perm.tolist()) == list(range(n))
+    start = 0
+    for size in rows:
+        seg = perm[start:start + size]
+        assert seg.min() >= start and seg.max() < start + size
+        start += size
+    load = pair_load(perm, num_shards)
+    # the leading 2-slab group is an exactly balanced exchange between
+    # shards 0 and 1; the tail groups never leave their own slab
+    np.testing.assert_array_equal(load[:2, :2],
+                                  np.full((2, 2), b // 2))
+    np.testing.assert_array_equal(load[2:, 2:], np.diag([b, b]))
+    assert load.sum() == n
+
+
+@settings(max_examples=8, deadline=None)
+@given(s=st.sampled_from([2, 4, 8]), mult=st.sampled_from([1, 2]),
+       grouped=st.booleans())
+def test_uniform_auto_slack_probe_stream_never_exceeded(s, mult, grouped):
+    """The probed uniform cap is never exceeded by ANY permutation of the
+    probe's own sample stream (rng seed 0, 16 draws, flush structure
+    honoured) — the margin row keeps every draw strictly inside. The
+    sampled perms ARE the probe's (re-drawn from its seed): the bound is
+    empirical, so fresh random draws are exactly what the forced-on
+    in-graph capacity check exists for."""
+    from repro.core.collector_dist import (max_pair_load, pair_capacity,
+                                           uniform_auto_slack)
+    n = s * s * 4 * mult
+    sizes = [n // 2, n // 2] if grouped else None
+    cap = pair_capacity(n, s, uniform_auto_slack(n, s, sizes))
+    rng = np.random.default_rng(0)
+    for _ in range(16):
+        if sizes:
+            parts, start = [], 0
+            for size in sizes:
+                parts.append(rng.permutation(size) + start)
+                start += size
+            perm = np.concatenate(parts)
+        else:
+            perm = rng.permutation(n)
+        assert max_pair_load(perm, s) < cap
+
+
+@settings(max_examples=8, deadline=None)
+@given(span=st.sampled_from([1, 2, 4]), shards=st.sampled_from([4, 8]),
+       mult=st.sampled_from([1, 2]))
+def test_balanced_stream_slack_probe_stream_never_exceeded(span, shards,
+                                                           mult):
+    """The streamed whole-mesh fallback's probed balanced cap covers every
+    draw of the probe's own permutation family (balanced over ``span``
+    blocks, uniform in place at span <= 1, measured against the fine
+    slabs), and the slack never exceeds the capacity-safe ``shards``
+    ceiling it replaces."""
+    from repro.core.collector_dist import (_np_balanced_perm,
+                                           balanced_stream_slack,
+                                           max_pair_load, pair_capacity)
+    n = span * span * shards * mult
+    slack = balanced_stream_slack(n, shards, span)
+    assert slack <= shards
+    cap = pair_capacity(n, shards, slack)
+    rng = np.random.default_rng(0)
+    for _ in range(16):
+        perm = (_np_balanced_perm(rng, n, span) if span > 1
+                else rng.permutation(n))
+        assert max_pair_load(perm, shards) < cap

@@ -237,3 +237,144 @@ def test_xlstm_model_with_pallas_slstm_matches_xla():
     lp, _ = X.forward(p, {"tokens": toks}, cfg_p, training=False)
     np.testing.assert_allclose(np.asarray(lp), np.asarray(lx),
                                rtol=2e-3, atol=2e-3)
+
+
+# --------------------------------------------------------------------------
+# route-plan bucket gathers: fuzzed shapes/dtypes, value and grad
+
+from repro.kernels.collector_permute.ops import (
+    bucket_permute, bucket_permute_ad, unbucket_permute,
+    unbucket_permute_ad)
+from repro.kernels.collector_permute.ref import (bucket_permute_ref,
+                                                 unbucket_permute_ref)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    sc=st.sampled_from([(2, 3), (4, 4), (8, 2), (3, 7)]),
+    feat=st.sampled_from([16, 100, 512, 513]),
+    perm=st.booleans(),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+)
+def test_bucket_permute_fuzz_matches_ref(sc, feat, perm, dtype):
+    """Two-level (S, cap) send gather vs the jnp oracle: permutation index
+    maps (the dense route-plan case) and maps with repeats/gaps (the
+    slack-padded case reuses filler rows) both reproduce bit-for-bit."""
+    S, cap = sc
+    rows = S * cap
+    key = jax.random.PRNGKey(S * 131 + cap * 17 + feat)
+    x = jax.random.normal(key, (rows, feat)).astype(dtype)
+    k2 = jax.random.fold_in(key, 1)
+    flat = (jax.random.permutation(k2, rows) if perm
+            else jax.random.randint(k2, (rows,), 0, rows))
+    idx = flat.reshape(S, cap).astype(jnp.int32)
+    out = bucket_permute(x, idx, interpret=True)
+    assert out.dtype == dtype and out.shape == (rows, feat)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(bucket_permute_ref(x, idx)))
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    rows=st.integers(2, 40),
+    b=st.sampled_from([1, 5, 16, 33]),
+    feat=st.sampled_from([16, 100, 513]),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+)
+def test_unbucket_permute_fuzz_matches_ref(rows, b, feat, dtype):
+    """Flat receive gather vs the jnp oracle, including B != R (the
+    sub-mesh slab is narrower than the whole-mesh receive width)."""
+    key = jax.random.PRNGKey(rows * 7 + b + feat)
+    x = jax.random.normal(key, (rows, feat)).astype(dtype)
+    idx = jax.random.randint(jax.random.fold_in(key, 1), (b,), 0, rows)
+    out = unbucket_permute(x, idx, interpret=True)
+    assert out.dtype == dtype and out.shape == (b, feat)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(unbucket_permute_ref(x, idx)))
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    sc=st.sampled_from([(2, 4), (4, 3), (8, 2)]),
+    feat=st.sampled_from([16, 129]),
+    perm=st.booleans(),
+)
+def test_bucket_gather_grads_match_ref(sc, feat, perm):
+    """AD through the differentiable wrappers vs AD through the jnp
+    oracles: repeats in the index map scatter-ADD into the source row, so
+    gradients must accumulate, not overwrite."""
+    S, cap = sc
+    rows = S * cap
+    key = jax.random.PRNGKey(S * 37 + feat)
+    x = jax.random.normal(key, (rows, feat), jnp.float32)
+    w = jax.random.normal(jax.random.fold_in(key, 2), (rows, feat))
+    k2 = jax.random.fold_in(key, 1)
+    flat = (jax.random.permutation(k2, rows) if perm
+            else jax.random.randint(k2, (rows,), 0, rows))
+    idx2 = flat.reshape(S, cap).astype(jnp.int32)
+    gk = jax.grad(
+        lambda x: jnp.sum(bucket_permute_ad(x, idx2, True) * w))(x)
+    gr = jax.grad(
+        lambda x: jnp.sum(bucket_permute_ref(x, idx2) * w))(x)
+    np.testing.assert_allclose(np.asarray(gk), np.asarray(gr),
+                               rtol=1e-6, atol=1e-6)
+    gk = jax.grad(
+        lambda x: jnp.sum(unbucket_permute_ad(x, flat, True) * w))(x)
+    gr = jax.grad(
+        lambda x: jnp.sum(unbucket_permute_ref(x, flat) * w))(x)
+    np.testing.assert_allclose(np.asarray(gk), np.asarray(gr),
+                               rtol=1e-6, atol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# fuzzed grad parity for the fused BN / xent epilogues (the fixed-shape
+# grad cases above pin one layout; these sweep shapes and dtypes)
+
+@settings(max_examples=8, deadline=None)
+@given(
+    rows=st.integers(1, 33),
+    c=st.sampled_from([8, 100, 128, 300]),
+    relu=st.booleans(),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+)
+def test_bn_act_grads_fuzz(rows, c, relu, dtype):
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    key = jax.random.PRNGKey(rows * 19 + c)
+    x = jax.random.normal(key, (rows, c)).astype(dtype)
+    a = jax.random.normal(jax.random.fold_in(key, 1), (c,)) * 0.5 + 1.0
+    b = jax.random.normal(jax.random.fold_in(key, 2), (c,)) * 0.5
+    w = jax.random.normal(jax.random.fold_in(key, 3), (rows, c))
+    f_k = lambda *o: jnp.sum(
+        bn_act(*o, relu=relu, interpret=True).astype(jnp.float32) * w)
+    f_r = lambda *o: jnp.sum(
+        bn_act_ref(*o, relu=relu).astype(jnp.float32) * w)
+    gk = jax.grad(f_k, argnums=(0, 1, 2))(x, a, b)
+    gr = jax.grad(f_r, argnums=(0, 1, 2))(x, a, b)
+    for u, v in zip(gk, gr):
+        assert u.dtype == v.dtype
+        np.testing.assert_allclose(np.asarray(u, np.float32),
+                                   np.asarray(v, np.float32),
+                                   rtol=tol, atol=tol)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    rows=st.integers(1, 40),
+    v=st.sampled_from([2, 10, 128, 200]),
+    ignore_some=st.booleans(),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+)
+def test_softmax_xent_grads_fuzz(rows, v, ignore_some, dtype):
+    tol = 1e-5 if dtype == jnp.float32 else 1e-2
+    key = jax.random.PRNGKey(rows * 23 + v)
+    logits = (jax.random.normal(key, (rows, v)) * 3).astype(dtype)
+    labels = jax.random.randint(jax.random.fold_in(key, 1), (rows,), 0, v)
+    if ignore_some:
+        labels = labels.at[::3].set(-100)
+    gk = jax.grad(
+        lambda z: softmax_xent(z, labels, interpret=True))(logits)
+    gr = jax.grad(lambda z: softmax_xent_ref(z, labels))(logits)
+    assert gk.dtype == dtype
+    np.testing.assert_allclose(np.asarray(gk, np.float32),
+                               np.asarray(gr, np.float32),
+                               rtol=tol, atol=tol)
