@@ -42,9 +42,18 @@ one forward pool exchange from the epoch collector's own
 ``exchange_bytes`` (plan shapes are dtype-independent, so the bf16
 payload is exactly half the f32 payload at a matched config).
 
+Every config is ALSO swept over ``--drop-clients`` (default ``0 1``):
+each ``k > 0`` adds a DEGRADED sync-pipeline record with the last ``k``
+clients masked out through the elastic participation path — masked rows
+still travel the collector (plan shapes are mask-independent), so
+``exchange_bytes`` is unchanged and the record says so out loud; the
+degraded quantity is throughput. Every record carries
+``participation_rate`` (1.0 on dense records) and a ``degraded`` flag.
+
 Run:  PYTHONPATH=src python benchmarks/collector_scale.py \
           [--epochs 2] [--alpha 0.5] [--out BENCH_collector.json] \
-          [--use-kernel] [--compute-dtype {float32,bfloat16,both}]
+          [--use-kernel] [--compute-dtype {float32,bfloat16,both}] \
+          [--drop-clients 0 1]
 Writes ``BENCH_collector.json`` (list of per-config records).
 """
 from __future__ import annotations
@@ -230,16 +239,38 @@ def bench_phases(data_sh, split, opt, st_sh, mesh, num_clients, batch_size,
 
 
 def bench_config(num_clients, batch_size, *, epochs, use_kernel, alpha,
-                 compute_dtype="float32"):
+                 compute_dtype="float32", drop_clients=0):
     """Both pipeline records for one (clients, batch) config; the
     single-device reference epoch runs ONCE and is shared, so the two
     records carry a consistent baseline — but each pipeline's phases are
     timed with ITS OWN exchange machinery (a shared dict once hid a
-    byte-identical-phases bug in BENCH_collector.json)."""
+    byte-identical-phases bug in BENCH_collector.json).
+
+    ``drop_clients=k`` is the DEGRADED leg: the last ``k`` clients sit
+    the epoch out via an elastic participation mask (flush groups keep a
+    survivor — ``ensure_group_survivor`` revives, logged). Masked rows
+    still TRAVEL the collector (the plan shapes are mask-independent), so
+    ``exchange_bytes`` is unchanged — the record logs that explicitly
+    instead of silently under-reporting the degraded wire cost; only the
+    sync pipeline is swept (the throughput question, not the overlap
+    one). Every record carries ``participation_rate`` and ``degraded``."""
+    from repro.core.faults import ensure_group_survivor
     cfg, data, split, opt, st0 = build(num_clients, batch_size,
                                        compute_dtype=compute_dtype)
     st0_host = jax.tree_util.tree_map(np.asarray, st0)
     key = jax.random.PRNGKey(1)
+
+    part = None
+    if drop_clients:
+        m = np.ones(num_clients, bool)
+        m[num_clients - drop_clients:] = False
+        m, revived = ensure_group_survivor(m, num_clients, alpha=alpha)
+        if revived:
+            print(f"N={num_clients:3d} B={batch_size:3d} degraded: revived "
+                  f"clients {revived} (flush group needs a survivor)",
+                  flush=True)
+        part = m
+    participation_rate = 1.0 if part is None else float(part.mean())
 
     # smashed-row geometry of THIS config's policy: the exchange payload
     # is counted in the dtype the activations actually cross the
@@ -252,7 +283,8 @@ def bench_config(num_clients, batch_size, *, epochs, use_kernel, alpha,
 
     single = jax.jit(lambda k, s: E.sfpl_epoch(
         k, s, data, split, opt, opt, num_clients=num_clients,
-        batch_size=batch_size, alpha=alpha))
+        batch_size=batch_size, alpha=alpha,
+        participation=None if part is None else jnp.asarray(part)))
     t_single, l_single = time_epochs(single, key, st0, epochs)
 
     mesh = ED.make_data_mesh(SHARDS)
@@ -267,13 +299,16 @@ def bench_config(num_clients, batch_size, *, epochs, use_kernel, alpha,
     n_pool = num_clients * batch_size
     group_rows = [c * batch_size
                   for c in C.flush_group_sizes(num_clients, alpha)]
-    pipelines = ["sync", "double_buffered"]
-    if submesh_slice_size(n_pool, SHARDS, group_rows) is not None:
-        pipelines.append("submesh")
+    if part is not None:
+        pipelines = ["sync"]
     else:
-        print(f"N={num_clients:3d} B={batch_size:3d} alpha={alpha}: "
-              f"layout does not qualify for sub-mesh routing — no "
-              f"submesh record", flush=True)
+        pipelines = ["sync", "double_buffered"]
+        if submesh_slice_size(n_pool, SHARDS, group_rows) is not None:
+            pipelines.append("submesh")
+        else:
+            print(f"N={num_clients:3d} B={batch_size:3d} alpha={alpha}: "
+                  f"layout does not qualify for sub-mesh routing — no "
+                  f"submesh record", flush=True)
 
     records = []
     for pipeline in pipelines:
@@ -294,7 +329,9 @@ def bench_config(num_clients, batch_size, *, epochs, use_kernel, alpha,
             split, opt, opt, data_sh, mesh=mesh, num_clients=num_clients,
             batch_size=batch_size, use_kernel=use_kernel, alpha=alpha,
             **pipe_kw)
-        t_sharded, l_sharded = time_epochs(sharded, key, fresh_sharded(),
+        step = (sharded if part is None
+                else (lambda k, s: sharded(k, s, participation=part)))
+        t_sharded, l_sharded = time_epochs(step, key, fresh_sharded(),
                                            epochs)
         # wire bytes of one forward pool exchange, from the EPOCH
         # collector (sweep alpha, this pipeline's plan shapes) — not the
@@ -317,6 +354,9 @@ def bench_config(num_clients, batch_size, *, epochs, use_kernel, alpha,
             "alpha": alpha,
             "pipeline": pipeline,
             "compute_dtype": compute_dtype,
+            "participation_rate": participation_rate,
+            "degraded": bool(part is not None),
+            "dropped_clients": int(drop_clients),
             "exchange_bytes": int(epoch_coll.exchange_bytes(
                 eprep, row_elems, exchange_dtype)),
             "epochs": epochs,
@@ -339,6 +379,12 @@ def bench_config(num_clients, batch_size, *, epochs, use_kernel, alpha,
               f"{phases['plan_build_s']*1e3:.1f}ms | exch "
               f"{phases['exchange_s']*1e3:.1f}ms | srv "
               f"{phases['server_update_s']*1e3:.1f}ms]", flush=True)
+        if part is not None:
+            print(f"N={num_clients:3d} B={batch_size:3d} degraded "
+                  f"({drop_clients} dropped, participation "
+                  f"{participation_rate:.2f}): masked rows still travel — "
+                  f"exchange_bytes unchanged at "
+                  f"{rec['exchange_bytes']}B", flush=True)
         records.append(rec)
 
     rec_sync = records[0]
@@ -368,6 +414,13 @@ def main():
                     choices=("float32", "bfloat16", "both"),
                     help="sweep the mixed-precision ComputePolicy path "
                          "('both' records f32 AND bf16 legs per config)")
+    ap.add_argument("--drop-clients", dest="drop_clients", type=int,
+                    nargs="*", default=[0, 1],
+                    help="elastic degradation sweep: for each k > 0 add a "
+                         "sync-pipeline record with the last k clients "
+                         "masked out (masked rows still travel — "
+                         "exchange_bytes is unchanged, throughput is the "
+                         "degraded quantity)")
     args = ap.parse_args()
     dtypes = (("float32", "bfloat16") if args.compute_dtype == "both"
               else (args.compute_dtype,))
@@ -391,10 +444,11 @@ def main():
                       flush=True)
                 continue
             for cd in dtypes:
-                records.extend(bench_config(n, b, epochs=args.epochs,
-                                            use_kernel=args.use_kernel,
-                                            alpha=args.alpha,
-                                            compute_dtype=cd))
+                for k in args.drop_clients:
+                    records.extend(bench_config(
+                        n, b, epochs=args.epochs,
+                        use_kernel=args.use_kernel, alpha=args.alpha,
+                        compute_dtype=cd, drop_clients=k))
     out = {
         "bench": "collector_scale",
         "devices": len(jax.devices()),

@@ -1,1 +1,2 @@
-from repro.checkpoint.npz import save_checkpoint, restore_checkpoint
+from repro.checkpoint.npz import (save_checkpoint, restore_checkpoint,
+                                  save_train_state, restore_train_state)

@@ -1,7 +1,26 @@
 """Pytree checkpointing to .npz (no orbax in container).
 
 Leaves are flattened to ``path -> array`` with '/'-joined dict keys; restore
-rebuilds into the reference tree's structure (shape/dtype verified).
+rebuilds into the reference tree's structure (shape verified, dtype re-cast
+to the reference leaf — bf16 round-trips through exact f32 widening).
+
+Writes are crash-safe: the archive is written to a sibling temp file
+through an open handle (so numpy cannot append its own ``.npz`` suffix),
+fsync'd, and atomically ``os.replace``d over the target — a reader either
+sees the old complete checkpoint or the new complete checkpoint, never a
+torn one.
+
+On multi-host meshes some leaves are jax Arrays that are not fully
+addressable from any single process; ``_to_host`` pulls a replicated
+leaf's local shard and allgathers a sharded leaf.  The allgather is a
+COLLECTIVE: every process must call :func:`save_checkpoint` (or
+:func:`save_train_state`) at the same point, while only the elected
+writer (process 0 by default) touches the filesystem.
+
+:func:`save_train_state` / :func:`restore_train_state` extend the plain
+pytree snapshot to the full training state needed for bit-compatible
+resume: params + optimizer state + BN statistics (the ``st`` dict), the
+host PRNG key, and the epoch counter.
 """
 from __future__ import annotations
 
@@ -12,30 +31,60 @@ import jax.numpy as jnp
 import numpy as np
 
 
+def _to_host(leaf):
+    """Fetch a leaf to host memory, including non-addressable mesh arrays."""
+    try:
+        return np.asarray(leaf)
+    except RuntimeError:
+        # Multi-host jax.Array: no single process sees every shard.
+        if getattr(leaf, "is_fully_replicated", False):
+            return np.asarray(leaf.addressable_data(0))
+        from jax.experimental import multihost_utils
+        return np.asarray(multihost_utils.process_allgather(leaf, tiled=True))
+
+
 def _flatten(tree):
     flat = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
         key = "/".join(
             str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
-        arr = np.asarray(leaf)
+        arr = _to_host(leaf)
         if arr.dtype == jnp.bfloat16:   # npz can't serialize ml_dtypes;
             arr = arr.astype(np.float32)  # exact widening, re-cast on load
         flat[key] = arr
     return flat
 
 
-def save_checkpoint(path, tree, *, step=None):
-    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+def save_checkpoint(path, tree, *, step=None, write=True):
+    """Snapshot ``tree`` to ``path`` atomically.
+
+    ``write=False`` performs the (possibly collective) host fetch but skips
+    the file I/O — multi-host callers invoke this on every process and
+    elect one writer.
+    """
     flat = _flatten(tree)
     if step is not None:
         flat["__step__"] = np.asarray(step)
-    tmp = path + ".tmp"
-    np.savez(tmp, **flat)
-    os.replace(tmp + ".npz" if os.path.exists(tmp + ".npz") else tmp, path)
+    if not write:
+        return
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    tmp = path + ".tmp.npz"
+    with open(tmp, "wb") as f:
+        # An open handle pins the destination name: np.savez appends
+        # ".npz" to bare paths but writes file objects verbatim.
+        np.savez(f, **flat)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
 
 
 def restore_checkpoint(path, ref_tree):
-    """Restore into ``ref_tree``'s structure. Returns (tree, step|None)."""
+    """Restore into ``ref_tree``'s structure. Returns (tree, step|None).
+
+    Raises ``ValueError`` (not ``assert`` — asserts vanish under
+    ``python -O``) on a missing leaf or a shape mismatch against the
+    reference tree; dtypes are re-cast to the reference leaf's dtype.
+    """
     with np.load(path) as data:
         step = data["__step__"] if "__step__" in data.files else None
         leaves_ref, treedef = jax.tree_util.tree_flatten_with_path(ref_tree)
@@ -43,9 +92,51 @@ def restore_checkpoint(path, ref_tree):
         for pathk, ref in leaves_ref:
             key = "/".join(
                 str(getattr(k, "key", getattr(k, "idx", k))) for k in pathk)
+            if key not in data.files:
+                raise ValueError(
+                    f"checkpoint {path!r} has no leaf {key!r} — reference "
+                    f"tree does not match the saved structure")
             arr = data[key]
-            assert arr.shape == ref.shape, (key, arr.shape, ref.shape)
+            ref_shape = tuple(getattr(ref, "shape", np.shape(ref)))
+            if tuple(arr.shape) != ref_shape:
+                raise ValueError(
+                    f"checkpoint {path!r} leaf {key!r} has shape "
+                    f"{tuple(arr.shape)}, reference expects {ref_shape}")
             out.append(jnp.asarray(arr, dtype=ref.dtype))
         tree = jax.tree_util.tree_unflatten(
             jax.tree_util.tree_structure(ref_tree), out)
     return tree, (int(step) if step is not None else None)
+
+
+# --------------------------------------------------------------------------
+# Full training state (params + opt state + BN stats + PRNG key + epoch)
+
+
+def save_train_state(path, st, *, key, epoch, write=None):
+    """Snapshot the full training state for mid-training resume.
+
+    ``st`` is the DCML state dict (client/server params, optimizer states,
+    BN statistics, step counter), ``key`` the host-side PRNG key that
+    seeds the NEXT epoch, ``epoch`` the number of epochs already finished.
+    Every process of a multi-host run must call this (the host fetch can
+    allgather); by default only process 0 writes.
+    """
+    if write is None:
+        write = jax.process_index() == 0
+    save_checkpoint(path, {"st": st, "key": key}, step=epoch, write=write)
+
+
+def restore_train_state(path, st_ref, *, key_ref=None):
+    """Returns ``(st, key, epoch)`` restored against reference structures.
+
+    ``st_ref`` supplies tree structure/shapes/dtypes (a freshly initialized
+    state works); ``key_ref`` defaults to a standard PRNG key.
+    """
+    if key_ref is None:
+        key_ref = jax.random.PRNGKey(0)
+    tree, epoch = restore_checkpoint(path, {"st": st_ref, "key": key_ref})
+    if epoch is None:
+        raise ValueError(
+            f"checkpoint {path!r} has no epoch counter (__step__) — was it "
+            f"written by save_train_state?")
+    return tree["st"], tree["key"], epoch

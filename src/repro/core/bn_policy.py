@@ -50,13 +50,22 @@ def fedavg(stacked_params, *, weights=None, exclude_bn=False):
     return jax.tree_util.tree_map_with_path(agg, stacked_params)
 
 
-def aggregate_bn_state(stacked_state, *, aggregate=False):
+def aggregate_bn_state(stacked_state, *, aggregate=False, weights=None):
     """BN running statistics. SFLv2 (RMSD) aggregates them like params;
-    SFPL keeps them local. Returns (N, ...) leaves either way."""
+    SFPL keeps them local. Returns (N, ...) leaves either way.
+
+    ``weights`` (elastic participation) restricts the aggregate to the
+    surviving clients — matching :func:`fedavg`'s weighted mean — so an
+    absent client's stale statistics don't drag the pooled RMSD."""
     if not aggregate:
         return stacked_state
 
     def agg(x):
-        return jnp.broadcast_to(jnp.mean(x, axis=0)[None], x.shape)
+        if weights is None:
+            avg = jnp.mean(x, axis=0)
+        else:
+            w = weights / jnp.sum(weights)
+            avg = jnp.tensordot(w, x, axes=1)
+        return jnp.broadcast_to(avg[None], x.shape)
 
     return jax.tree_util.tree_map(agg, stacked_state)

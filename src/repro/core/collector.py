@@ -92,6 +92,57 @@ def make_flush_perm(key, n, num_clients, alpha):
     return jnp.concatenate(parts)
 
 
+def check_participation(num_clients, participation, *, alpha=1.0):
+    """Validate an elastic-participation mask eagerly (host side).
+
+    ``participation`` is a bool mask of shape ``(num_clients,)`` (static
+    per-epoch) or ``(steps, num_clients)`` (per-step).  Every flush group
+    must keep at least one surviving client — an all-absent group would
+    leave its pooled slice with zero valid rows and the server update for
+    that slice undefined.  Raises ``ValueError`` naming the offending
+    flush group (and step, for per-step masks); returns the mask as a
+    numpy bool array.
+
+    >>> import numpy as np
+    >>> check_participation(4, [True, False, True, True], alpha=0.5)
+    array([ True, False,  True,  True])
+    >>> check_participation(4, [True, True, False, False],
+    ...                     alpha=0.5)  # doctest: +ELLIPSIS
+    Traceback (most recent call last):
+        ...
+    ValueError: participation mask drops ALL clients of flush group 1 ...
+    """
+    import numpy as np
+    if participation is None:
+        return None
+    mask = np.asarray(participation)
+    if mask.ndim not in (1, 2) or mask.shape[-1] != num_clients:
+        raise ValueError(
+            f"participation mask must have shape ({num_clients},) or "
+            f"(steps, {num_clients}); got {mask.shape}")
+    mask = mask.astype(bool)
+    groups = flush_group_sizes(num_clients, alpha)
+    rows = mask[None] if mask.ndim == 1 else mask
+    start = 0
+    for g, c in enumerate(groups):
+        alive = rows[:, start:start + c].any(axis=1)
+        if not alive.all():
+            step = int(np.argmin(alive))
+            at = "" if mask.ndim == 1 else f" at step {step}"
+            raise ValueError(
+                f"participation mask drops ALL clients of flush group {g} "
+                f"(clients {start}..{start + c}, alpha={alpha}){at} — "
+                f"each flush group needs >= 1 surviving client")
+        start += c
+    return mask
+
+
+def participation_row_mask(mask, batch_size):
+    """Expand a per-client mask to the client-major pooled row mask:
+    row ``k * batch_size + j`` is valid iff client ``k`` participates."""
+    return jnp.repeat(jnp.asarray(mask, dtype=bool), batch_size)
+
+
 def distributed_shuffle(x, perm):
     """Mesh-aware collector: ``x`` is the pooled global batch whose leading
     axis is sharded over ("pod","data")). A gather by a global permutation is

@@ -35,14 +35,16 @@ import jax.numpy as jnp
 from repro.core import round as RD
 from repro.core.bn_policy import fedavg, aggregate_bn_state
 from repro.core.round import make_client_update  # noqa: F401  (re-export)
-from repro.models.common import softmax_cross_entropy
+from repro.models.common import IGNORE_LABEL, softmax_cross_entropy
 
 
 @dataclasses.dataclass(frozen=True)
 class SplitModel:
     # (cparams, cstate, x, training, rmsd) -> (smashed, new_cstate)
     client_fwd: Callable
-    # (sparams, sstate, A, y, training, rmsd) -> (loss, (new_sstate, logits))
+    # (sparams, sstate, A, y, training, rmsd[, valid]) ->
+    #     (loss, (new_sstate, logits)); the keyword-only ``valid`` row mask
+    #     is required only when the engine runs with elastic participation
     server_loss: Callable
     # (params, state, x, y, training, rmsd) -> (loss, (new_state, logits))
     full_loss: Callable
@@ -74,9 +76,18 @@ def make_resnet_split(cfg, policy=None):
         return R.client_apply(cp, cs, x, training=training, rmsd=rmsd,
                               policy=policy)
 
-    def server_loss(sp, ss, a, y, training=True, rmsd=None):
+    def server_loss(sp, ss, a, y, training=True, rmsd=None, valid=None):
+        if valid is not None:
+            # Elastic participation: absent clients' rows ride along for
+            # static shapes but must be inert — zero their activations
+            # (exact zero grads through jnp.where), drop their labels to
+            # IGNORE_LABEL (the loss already means over valid rows), and
+            # exclude them from every BN batch statistic.
+            vb = valid.reshape((-1,) + (1,) * (a.ndim - 1))
+            a = jnp.where(vb, a, jnp.zeros((), a.dtype))
+            y = jnp.where(valid, y, IGNORE_LABEL)
         logits, nss = R.server_apply(sp, ss, a, cfg, training=training,
-                                     rmsd=rmsd, policy=policy)
+                                     rmsd=rmsd, policy=policy, valid=valid)
         return loss_fn(logits, y), (nss, logits)
 
     def full_loss(p, s, x, y, training=True, rmsd=None):
@@ -111,7 +122,8 @@ def init_dcml_state(key, init_fn, num_clients, opt_client, opt_server):
 # SFPL epoch (Algorithm 1 + 2)
 
 def sfpl_epoch(key, st, data, split: SplitModel, opt_c, opt_s, *,
-               num_clients, batch_size, bn_mode="cmsd", alpha=1.0):
+               num_clients, batch_size, bn_mode="cmsd", alpha=1.0,
+               participation=None):
     """data: {"x": (N, n, ...), "y": (N, n)}. One epoch = scan over the
     n // batch_size local batches — ``round.sfpl_round`` with the dense
     single-device collector.
@@ -123,11 +135,16 @@ def sfpl_epoch(key, st, data, split: SplitModel, opt_c, opt_s, *,
       * "rmsd" — BatchNorm params and running stats ARE aggregated;
         inference uses the aggregated running statistics. Wins for IID
         testing (Tables VI, VII).
+
+    ``participation`` (optional ``(num_clients,)`` or ``(steps,
+    num_clients)`` bool) masks absent clients for the epoch or per step —
+    see :func:`repro.core.round.sfpl_round`.
     """
     return RD.sfpl_round(
         key, st, data, split, opt_c, opt_s, num_clients=num_clients,
         batch_size=batch_size, bn_mode=bn_mode,
-        collector=RD.SINGLE.collector(num_clients, alpha=alpha))
+        collector=RD.SINGLE.collector(num_clients, alpha=alpha),
+        participation=participation)
 
 
 # --------------------------------------------------------------------------

@@ -44,6 +44,7 @@ in place shard-by-shard.
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 
 from repro.core import collector as C
 from repro.core import round as RD
@@ -113,7 +114,8 @@ def shard_client_data(data, mesh, *, axis=None):
 def check_sfpl_layout(num_clients, batch_size, n_shards, *, alpha=1.0,
                       collector_mode="balanced",
                       collector_pipeline="sync",
-                      collector_submesh=None, pods=None):
+                      collector_submesh=None, pods=None,
+                      participation=None):
     """Eager validation of the sharded SFPL layout; raises ValueError with
     an actionable message before any device work.
 
@@ -142,10 +144,21 @@ def check_sfpl_layout(num_clients, batch_size, n_shards, *, alpha=1.0,
     exchange falls back to the probed-slack whole-mesh path, logged), but
     ``collector_submesh=True`` raises on them.
 
+    ``participation`` (optional elastic-participation mask,
+    ``(num_clients,)`` or ``(steps, num_clients)``) is validated against
+    the flush-group structure — wrong length, or any flush group left
+    with zero surviving clients, raises a ValueError naming the group
+    (``collector.check_participation``).
+
     Returns the flush-group row counts of the accepted layout:
 
     >>> check_sfpl_layout(8, 8, 8)
     [64]
+    >>> check_sfpl_layout(8, 8, 8, alpha=0.5,
+    ...     participation=[1, 1, 1, 1, 0, 0, 0, 0])  # doctest: +ELLIPSIS
+    Traceback (most recent call last):
+        ...
+    ValueError: participation mask drops ALL clients of flush group 1 ...
     >>> check_sfpl_layout(8, 8, 8, alpha=0.5)
     [32, 32]
     >>> check_sfpl_layout(8, 8, 8, alpha=0.25, collector_submesh=True,
@@ -169,6 +182,8 @@ sizes [32, 32] over 4 shards (num_clients=8, batch_size=8, alpha=0.5)
         raise ValueError(
             f"num_clients={num_clients} must divide evenly over "
             f"{n_shards} shards")
+    if participation is not None:
+        C.check_participation(num_clients, participation, alpha=alpha)
     if pods is not None and (pods < 1 or n_shards % pods):
         raise ValueError(
             f"pods={pods} must be >= 1 and divide n_shards={n_shards} "
@@ -235,13 +250,21 @@ sizes [32, 32] over 4 shards (num_clients=8, batch_size=8, alpha=0.5)
 
 def fit_shards(num_clients, batch_size, *, scheme="sfpl", alpha=1.0,
                collector_mode="balanced", collector_pipeline="sync",
-               collector_submesh=None, pods=None, max_shards=None):
+               collector_submesh=None, pods=None, max_shards=None,
+               participation=None):
     """Largest shard count (up to the visible devices) the layout supports
     — shared by the launch drivers so every entrypoint degrades to a
     smaller mesh instead of crashing on indivisible configurations. With
     ``pods`` set, only shard counts divisible into ``pods`` equal pod
     slices are considered (``make_data_mesh(s, pods=pods)`` must be
-    buildable), and sub-mesh qualification is checked pod-locally."""
+    buildable), and sub-mesh qualification is checked pod-locally.
+
+    ``participation`` is validated ONCE up front (the check is
+    shard-independent): a bad mask raises immediately instead of being
+    swallowed by the per-shard-count search and silently degrading to
+    the 1-shard fallback."""
+    if participation is not None:
+        C.check_participation(num_clients, participation, alpha=alpha)
     max_shards = max_shards or len(jax.devices())
     for s in range(max_shards, 0, -1):
         if pods is not None and s % pods:
@@ -270,7 +293,7 @@ def sfpl_epoch_sharded(key, st, data, split: SplitModel, opt_c, opt_s, *,
                        check_capacity=False, axis=None,
                        collector_mode="balanced",
                        collector_pipeline="sync", stream_slack=None,
-                       collector_submesh=None):
+                       collector_submesh=None, participation=None):
     """Drop-in sharded replacement for ``engine.sfpl_epoch``.
 
     Shape/layout contract: ``st`` is an ``init_dcml_state`` tree placed by
@@ -311,15 +334,26 @@ def sfpl_epoch_sharded(key, st, data, split: SplitModel, opt_c, opt_s, *,
     mesh (``make_data_mesh(..., pods=...)``), where the layout check runs
     with the mesh's pod count so sub-mesh routing only claims pod-local
     slices.
+
+    ``participation`` masks absent clients for the epoch (elastic
+    participation — see ``round.sfpl_round``). A concrete (host) mask is
+    validated eagerly against the flush-group structure; a traced mask
+    (already inside a jit) skips the eager check, which the jitting
+    caller must then run itself (``make_sfpl_epoch_sharded`` does).
     """
     axis = _resolve_axis(mesh, axis)
     names = (axis,) if isinstance(axis, str) else tuple(axis)
     n_shards = mesh_axis_size(mesh, axis)
     pods = (mesh_axis_size(mesh, names[0]) if len(names) > 1 else None)
+    part_host = (participation
+                 if participation is not None
+                 and not isinstance(participation, jax.core.Tracer)
+                 else None)
     check_sfpl_layout(num_clients, batch_size, n_shards, alpha=alpha,
                       collector_mode=collector_mode,
                       collector_pipeline=collector_pipeline,
-                      collector_submesh=collector_submesh, pods=pods)
+                      collector_submesh=collector_submesh, pods=pods,
+                      participation=part_host)
     placement = RD.DataMesh(mesh, axis)
     return RD.sfpl_round(
         key, st, data, split, opt_c, opt_s, num_clients=num_clients,
@@ -328,23 +362,45 @@ def sfpl_epoch_sharded(key, st, data, split: SplitModel, opt_c, opt_s, *,
             num_clients, alpha=alpha, mode=collector_mode, slack=slack,
             use_kernel=use_kernel, check_capacity=check_capacity,
             pipeline=collector_pipeline, stream_slack=stream_slack,
-            submesh=collector_submesh))
+            submesh=collector_submesh),
+        participation=participation)
 
 
 def make_sfpl_epoch_sharded(split: SplitModel, opt_c, opt_s, data, *,
                             mesh, num_clients, batch_size, **kw):
-    """Jitted hot loop: ``(key, st) -> (st, losses)`` with the carried state
-    donated, so the sharded param/opt buffers are reused in place.
+    """Jitted hot loop: ``(key, st[, participation]) -> (st, losses)``
+    with the carried state donated, so the sharded param/opt buffers are
+    reused in place.
 
     ``data`` is bound as a jit ARGUMENT, not a closure: multi-host global
     arrays span non-addressable devices and jax refuses to close over
-    them, while passing them through the jit boundary is fine."""
-    def epoch(key, st, data):
+    them, while passing them through the jit boundary is fine.
+
+    The returned callable takes an optional ``participation`` mask
+    (``(num_clients,)`` or ``(steps, num_clients)`` bool) for elastic
+    rounds. It is validated eagerly on the host (>= 1 survivor per flush
+    group — so fully-dropped flush groups, and with them the streamed
+    skip fast path, cannot arise here) and then rides through the jit
+    boundary as a TRACED argument: every epoch's mask reuses one
+    specialization instead of retracing per draw of a fault schedule.
+    ``None`` and masked epochs are separate specializations (two
+    traces)."""
+    alpha = kw.get("alpha", 1.0)
+
+    def epoch(key, st, data, participation=None):
         return sfpl_epoch_sharded(key, st, data, split, opt_c, opt_s,
                                   mesh=mesh, num_clients=num_clients,
-                                  batch_size=batch_size, **kw)
+                                  batch_size=batch_size,
+                                  participation=participation, **kw)
     jitted = jax.jit(epoch, donate_argnums=(1,))
-    return lambda key, st: jitted(key, st, data)
+
+    def run(key, st, participation=None):
+        if participation is None:
+            return jitted(key, st, data)
+        mask = C.check_participation(num_clients, participation,
+                                     alpha=alpha)
+        return jitted(key, st, data, jnp.asarray(mask))
+    return run
 
 
 def sflv2_epoch_sharded(key, st, data, split: SplitModel, opt_c, opt_s, *,

@@ -526,13 +526,16 @@ class StreamingAllToAll(MeshAllToAll):
     def _plans_are_submesh(prep):
         return prep.plans[0][0].slice_size is not None
 
-    def permute(self, x, prep):
+    def permute(self, x, prep, skip=None):
         """Blocking whole-pool shuffle under the per-group plans (used for
         the label pool, which never interleaves with client compute):
         each sealed flush group is one plan exchange. Sub-mesh plans take
         the whole pool (each exchange is confined to its slice by
         ``axis_index_groups``) and the group outputs are mask-combined;
-        fallback plans take the group's rows and the outputs concatenate."""
+        fallback plans take the group's rows and the outputs concatenate.
+        ``skip`` (per-group bools — elastic participation) passes a fully
+        dropped group's rows through unexchanged: every row is masked
+        downstream, so the collective would only move dead payload."""
         n = x.shape[0]
         if not isinstance(prep, PreparedPerm):
             prep = self.prepare(prep, n)
@@ -540,6 +543,9 @@ class StreamingAllToAll(MeshAllToAll):
         for g, (r0, r1) in enumerate(self.group_bounds(n)):
             rows = (x if self._plans_are_submesh(prep)
                     else jax.lax.slice_in_dim(x, r0, r1, axis=0))
+            if skip and skip[g]:
+                parts.append(rows)
+                continue
             parts.append(plan_shuffle(
                 rows, prep.plans[g],
                 mesh=self.mesh, axis=self.axis,
@@ -578,11 +584,13 @@ class StreamingAllToAll(MeshAllToAll):
         return sum(plan_payload_bytes(plans[0], row_elems, itemsize)
                    for plans in prep.plans)
 
-    def route_back(self, g_shuf, prep, n):
+    def route_back(self, g_shuf, prep, n, skip=None):
         """Algorithm 1's de-shuffle, explicit: the per-group exchange with
         the BACKWARD plan of the shared ``prepare`` hands each client its
         own activation gradients — move-for-move what autodiff emits for
-        the synchronous path, so trajectories stay bit-comparable."""
+        the synchronous path, so trajectories stay bit-comparable.
+        ``skip`` mirrors the forward skip of a fully dropped flush group
+        (its gradient rows are exact zeros — nothing to route)."""
         if not isinstance(prep, PreparedPerm):
             prep = self.prepare(prep, n)
         submesh = self._plans_are_submesh(prep)
@@ -590,6 +598,9 @@ class StreamingAllToAll(MeshAllToAll):
         for g, (r0, r1) in enumerate(self.group_bounds(n)):
             rows = (g_shuf if submesh
                     else jax.lax.slice_in_dim(g_shuf, r0, r1, axis=0))
+            if skip and skip[g]:
+                parts.append(rows)
+                continue
             parts.append(plan_exchange(
                 rows, prep.plans[g][1], mesh=self.mesh, axis=self.axis,
                 use_kernel=self._use_k(g_shuf.dtype)))
@@ -619,7 +630,7 @@ def _combine_slices(parts, bounds):
     return out
 
 
-def streamed_shuffle(collector, prep, n, produce_group):
+def streamed_shuffle(collector, prep, n, produce_group, skip=None):
     """Two-slot software pipeline over flush groups.
 
     ``prep`` is the step's ``collector.prepare(perm, n)`` (a bare
@@ -637,6 +648,12 @@ def streamed_shuffle(collector, prep, n, produce_group):
     tests/test_streaming.py property-checks: the last flush group is
     never dropped).
 
+    ``skip`` (optional per-group bools — elastic participation) marks
+    flush groups whose clients ALL dropped this epoch: their rows pass
+    through unexchanged (every row is masked downstream) and the pipeline
+    spends no collective on them. Groups with ANY survivor still run
+    their full exchange — absent clients' rows travel and are masked.
+
     Returns the shuffled pool — row for row equal to
     ``collector.permute(pool, perm)`` on the synchronous strategy.
     """
@@ -645,16 +662,24 @@ def streamed_shuffle(collector, prep, n, produce_group):
     bounds = collector.group_bounds(n)
     parts, slot = [], None
     for g in range(len(bounds)):
-        ticket = None
+        ticket = passthrough = None
         if slot is not None:
-            ticket = collector.issue(slot, prep, g - 1)
+            if skip and skip[g - 1]:
+                passthrough = slot
+            else:
+                ticket = collector.issue(slot, prep, g - 1)
         rows = produce_group(g)
         if ticket is not None:
             parts.append(collector.complete(ticket))
+        elif passthrough is not None:
+            parts.append(passthrough)
         slot = rows
     # drain epilogue: the last filled buffer is still in flight
-    parts.append(collector.complete(
-        collector.issue(slot, prep, len(bounds) - 1)))
+    last = len(bounds) - 1
+    if skip and skip[last]:
+        parts.append(slot)
+    else:
+        parts.append(collector.complete(collector.issue(slot, prep, last)))
     return collector.assemble(parts, prep, n)
 
 
@@ -683,7 +708,7 @@ def make_client_update(split, opt_c):
 # SFPL round (Algorithm 1 + 2), one body for every placement
 
 def sfpl_round(key, st, data, split, opt_c, opt_s, *, num_clients,
-               batch_size, bn_mode="cmsd", collector):
+               batch_size, bn_mode="cmsd", collector, participation=None):
     """One SFPL epoch: scan over the n // batch_size local batches.
 
     ``collector`` is the strategy object (``DenseTake`` / ``MeshAllToAll``)
@@ -692,6 +717,24 @@ def sfpl_round(key, st, data, split, opt_c, opt_s, *, num_clients,
     local client updates, epoch-end ClientFedServer — is placement-
     agnostic. ``bn_mode`` selects the paper's aggregation variants:
     "cmsd" excludes BatchNorm from ClientFedServer, "rmsd" aggregates it.
+
+    ``participation`` (optional bool mask, ``(num_clients,)`` for the
+    whole epoch or ``(steps, num_clients)`` per step) is ELASTIC
+    PARTICIPATION: absent clients' rows stay in the pool for static
+    shapes but are masked out of the server update exactly — activations
+    zeroed through ``jnp.where`` (exact zero cotangents), labels dropped
+    to the loss's ignore index (the loss means over surviving rows), BN
+    batch statistics weighted over valid rows only — their local updates
+    are gated back to the pre-step state, and the epoch-end
+    ClientFedServer averages over (and broadcasts to) the participants
+    only. The trajectory therefore matches a dense run on just the
+    surviving clients; the differential tests pin it at <= 1e-5. A
+    STATIC epoch mask additionally lets the streamed pipeline skip the
+    collective of any flush group whose clients all dropped (the mask
+    must be concrete at trace time for that fast path; traced masks
+    drain every group). The mask must keep >= 1 survivor per flush group
+    — ``repro.core.collector.check_participation`` validates this
+    eagerly on the host-side entrypoints.
     """
     n_local = data["x"].shape[1]
     steps = n_local // batch_size
@@ -706,6 +749,23 @@ def sfpl_round(key, st, data, split, opt_c, opt_s, *, num_clients,
     cgroups = (collector.client_groups()
                if streamed and not submesh else None)
 
+    part = part_static = None
+    if participation is not None:
+        if not isinstance(participation, jax.core.Tracer):
+            part_static = np.asarray(participation).astype(bool)
+        part = jnp.asarray(participation).astype(bool)
+        if part.ndim not in (1, 2) or part.shape[-1] != num_clients:
+            raise ValueError(
+                f"participation mask must have shape ({num_clients},) or "
+                f"(steps, {num_clients}); got {part.shape}")
+    per_step_part = part is not None and part.ndim == 2
+    skip = None
+    if streamed and part_static is not None and part_static.ndim == 1:
+        skip = tuple(not part_static[c0:c1].any()
+                     for c0, c1 in collector.client_groups())
+        if not any(skip):
+            skip = None
+
     def one_step(carry, idx):
         st, key = carry
         key, kperm = jax.random.split(key)
@@ -719,12 +779,24 @@ def sfpl_round(key, st, data, split, opt_c, opt_s, *, num_clients,
         # the label permute, activation permute, backward exchange, and
         # (streamed) route_back all reuse it
         prep = collector.prepare(perm, n_pool)
-        y_shuf = collector.permute(y_pool, prep)
+        y_shuf = (collector.permute(y_pool, prep, skip=skip) if streamed
+                  else collector.permute(y_pool, prep))
+        mask_c = valid_shuf = None
+        if part is not None:
+            mask_c = part[idx] if per_step_part else part
+            # client-major row mask through the SAME permutation as the
+            # pool; perm is replicated, so this is a local gather
+            valid_shuf = jnp.take(jnp.repeat(mask_c, batch_size), perm)
         fwd = lambda cp, cs, x: split.client_fwd(cp, cs, x, True, None)
 
         def srv_loss_on(sp, a_shuf):
-            loss, (nss, _) = split.server_loss(sp, st["sbn"], a_shuf,
-                                               y_shuf, True, None)
+            if valid_shuf is None:
+                loss, (nss, _) = split.server_loss(sp, st["sbn"], a_shuf,
+                                                   y_shuf, True, None)
+            else:
+                loss, (nss, _) = split.server_loss(sp, st["sbn"], a_shuf,
+                                                   y_shuf, True, None,
+                                                   valid=valid_shuf)
             return loss, nss
 
         if streamed and submesh:
@@ -738,11 +810,11 @@ def sfpl_round(key, st, data, split, opt_c, opt_s, *, num_clients,
             A, ncbn = jax.vmap(fwd)(st["cp"], st["cbn"], xb)
             a_pool = A.reshape((n_pool,) + A.shape[2:])
             a_shuf = streamed_shuffle(collector, prep, n_pool,
-                                      lambda g: a_pool)
+                                      lambda g: a_pool, skip=skip)
             (loss, nsbn), (g_sp, g_shuf) = jax.value_and_grad(
                 srv_loss_on, argnums=(0, 1), has_aux=True)(
                 st["sp"], a_shuf)
-            g_pool = collector.route_back(g_shuf, prep, n_pool)
+            g_pool = collector.route_back(g_shuf, prep, n_pool, skip=skip)
         elif streamed:
             # 1+2+3 pipelined: the client forward runs flush group by
             # flush group, and each filled group's all_to_all is in
@@ -764,14 +836,14 @@ def sfpl_round(key, st, data, split, opt_c, opt_s, *, num_clients,
                 return A_g.reshape((-1,) + A_g.shape[2:])
 
             a_shuf = streamed_shuffle(collector, prep, n_pool,
-                                      produce_group)
+                                      produce_group, skip=skip)
             A = _concat_parts(A_parts)
             ncbn = jax.tree_util.tree_map(
                 lambda *xs: _concat_parts(list(xs)), *bn_parts)
             (loss, nsbn), (g_sp, g_shuf) = jax.value_and_grad(
                 srv_loss_on, argnums=(0, 1), has_aux=True)(
                 st["sp"], a_shuf)
-            g_pool = collector.route_back(g_shuf, prep, n_pool)
+            g_pool = collector.route_back(g_shuf, prep, n_pool, skip=skip)
         else:
             # 1. client forward, parallel over the (possibly sharded)
             # client axis
@@ -798,6 +870,19 @@ def sfpl_round(key, st, data, split, opt_c, opt_s, *, num_clients,
             lambda cp, cbn, copt, x, da: client_upd(cp, cbn, copt, x, da,
                                                     st["step"]))(
             st["cp"], ncbn, st["copt"], xb, dA)
+        if mask_c is not None:
+            # Absent clients take NO local step: their activation grads
+            # are already exact zeros, but the optimizer would still move
+            # params (weight decay, momentum decay) and the forward still
+            # advanced BN running stats — gate all three back to the
+            # pre-step values so they match a run they never joined.
+            gate = lambda new, old: jax.tree_util.tree_map(
+                lambda nl, ol: jnp.where(
+                    mask_c.reshape((-1,) + (1,) * (nl.ndim - 1)), nl, ol),
+                new, old)
+            cp_new = gate(cp_new, st["cp"])
+            copt_new = gate(copt_new, st["copt"])
+            ncbn2 = gate(ncbn2, st["cbn"])
 
         st = dict(st, cp=cp_new, cbn=ncbn2, sp=sp_new, sbn=nsbn,
                   copt=copt_new, sopt=sopt_new, step=st["step"] + 1)
@@ -806,10 +891,18 @@ def sfpl_round(key, st, data, split, opt_c, opt_s, *, num_clients,
     (st, _), losses = jax.lax.scan(one_step, (st, key), jnp.arange(steps))
 
     # 5. ClientFedServer: FedAvg across the client axis (an all-reduce when
-    # sharded); BN treatment per bn_mode
+    # sharded); BN treatment per bn_mode. Under elastic participation the
+    # average runs over the epoch's participants only and is broadcast to
+    # every client — absent clients rejoin on the fresh global model,
+    # while their (excluded) local BN stays theirs.
     exclude = bn_mode == "cmsd"
-    st = dict(st, cp=fedavg(st["cp"], exclude_bn=exclude),
-              cbn=aggregate_bn_state(st["cbn"], aggregate=not exclude))
+    w = None
+    if part is not None:
+        epoch_mask = part if part.ndim == 1 else part.any(axis=0)
+        w = epoch_mask.astype(jnp.float32)
+    st = dict(st, cp=fedavg(st["cp"], weights=w, exclude_bn=exclude),
+              cbn=aggregate_bn_state(st["cbn"], aggregate=not exclude,
+                                     weights=w))
     return st, losses
 
 

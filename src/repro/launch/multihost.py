@@ -30,12 +30,15 @@ import jax
 import numpy as np
 
 from repro.core import engine_dist as ED
+from repro.core.retry import retry_call
 
 logger = logging.getLogger(__name__)
 
 
 def initialize(coordinator_address, num_processes, process_id, *,
-               local_devices=None, cpu_collectives="gloo"):
+               local_devices=None, cpu_collectives="gloo",
+               connect_attempts=5, connect_base_delay=0.5,
+               connect_max_delay=8.0, sleep=None):
     """Join the JAX distributed runtime — call before ANY other jax use.
 
     ``local_devices`` forces this process's CPU device count via
@@ -45,7 +48,16 @@ def initialize(coordinator_address, num_processes, process_id, *,
     implementation: the default backend cannot run multi-process
     collectives at all, so "gloo" is the working default. It is a config
     flag, NOT an environment variable — the env spelling is silently
-    ignored, which is why this helper sets it explicitly."""
+    ignored, which is why this helper sets it explicitly.
+
+    The coordinator join races the coordinator's listen socket (and, on a
+    real fleet, any transient fabric fault), so it runs under
+    ``core.retry.retry_call``: ``connect_attempts`` tries with jittered
+    exponential backoff between ``connect_base_delay`` and
+    ``connect_max_delay`` seconds, the jitter seeded by ``process_id`` so
+    simultaneous joiners decorrelate deterministically. After the budget a
+    ``core.retry.RetryError`` names the join, the budget, and the last
+    underlying error. ``sleep`` injects a test clock."""
     if (local_devices is not None
             and "xla_force_host_platform_device_count"
             not in os.environ.get("XLA_FLAGS", "")):
@@ -54,9 +66,30 @@ def initialize(coordinator_address, num_processes, process_id, *,
             + f" --xla_force_host_platform_device_count={local_devices}"
         ).strip()
     jax.config.update("jax_cpu_collectives_implementation", cpu_collectives)
-    jax.distributed.initialize(coordinator_address=coordinator_address,
-                               num_processes=num_processes,
-                               process_id=process_id)
+    kw = {} if sleep is None else {"sleep": sleep}
+
+    def _join():
+        try:
+            jax.distributed.initialize(
+                coordinator_address=coordinator_address,
+                num_processes=num_processes, process_id=process_id)
+        except Exception:
+            # a failed connect can leave the distributed client half-set,
+            # which would turn every retry into "already initialized" —
+            # reset it so the next attempt starts clean
+            try:
+                jax.distributed.shutdown()
+            except Exception:
+                pass
+            raise
+
+    retry_call(
+        _join,
+        attempts=connect_attempts, base_delay=connect_base_delay,
+        max_delay=connect_max_delay, seed=process_id,
+        retry_on=(RuntimeError, ConnectionError, TimeoutError),
+        describe=(f"jax.distributed join (process {process_id}/"
+                  f"{num_processes} -> {coordinator_address})"), **kw)
     logger.info("joined distributed runtime: process %d/%d at %s",
                 process_id, num_processes, coordinator_address)
 

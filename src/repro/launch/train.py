@@ -28,7 +28,9 @@ Usage:
   PYTHONPATH=src python -m repro.launch.train --paper --sharded \
       --clients 8 --epochs 4 [--scheme sflv2] [--alpha 0.5] \
       [--collector uniform] [--pipeline double_buffered] [--submesh] \
-      [--use-kernel]
+      [--use-kernel] \
+      [--ckpt state.npz --ckpt-every 1] [--resume state.npz] \
+      [--drop-rate 0.2 --straggler-rate 0.1 --straggler-timeout 0.5]
 """
 from __future__ import annotations
 
@@ -104,7 +106,10 @@ def train_paper(*, num_clients=8, epochs=4, batch_size=8, sharded=False,
                 use_kernel=None, depth=8, width=8, hw=8, lr=0.05,
                 scheme="sfpl", alpha=1.0, collector="balanced",
                 pipeline="sync", submesh=None, pods=None,
-                compute_dtype="float32", log_every=1):
+                compute_dtype="float32", log_every=1,
+                ckpt=None, ckpt_every=0, resume=None,
+                straggler_timeout=None, drop_rate=0.0, straggler_rate=0.0,
+                straggler_delay=1.0, fault_seed=0):
     """DCML rounds on synthetic CIFAR, one client per class (only positive
     labels). ``scheme`` picks SFPL (Algorithm 1 + 2) or the SFLv2 baseline;
     ``sharded`` runs the same round body on a mesh over all visible devices
@@ -117,12 +122,36 @@ def train_paper(*, num_clients=8, epochs=4, batch_size=8, sharded=False,
     on TPU. ``pods`` splits the sharded SFPL mesh into the 2-D
     ``("pod", "data")`` multi-host topology (one pod per host process
     under ``launch.multihost.initialize``; also works single-process for
-    schedule parity testing)."""
+    schedule parity testing).
+
+    Fault tolerance (SFPL only): ``drop_rate`` / ``straggler_rate`` drive
+    a deterministic :class:`~repro.core.faults.FaultPlan` whose per-epoch
+    participation mask is threaded into the round — absent clients'
+    activations are masked out of pooling/BN/loss and their local state is
+    frozen for the epoch. ``straggler_timeout=None`` WAITS for stragglers
+    (the host stalls); a finite timeout DROPS-AND-MASKS them. A draw that
+    would empty a flush group has its lowest-index client revived (logged).
+    ``ckpt`` + ``ckpt_every`` snapshot the full training state (params,
+    optimizer, BN stats, PRNG key, epoch) every N epochs; ``resume``
+    restores such a snapshot and continues bit-compatibly — on a sharded
+    mesh only process 0 writes, but every process calls the (collective)
+    save."""
     from repro.core import engine as E
     from repro.core.evaluate import evaluate_split_noniid
+    from repro.core.faults import FaultPlan, ensure_group_survivor
     from repro.data import make_synthetic_cifar, partition_positive_labels
     from repro.models import resnet as R
     from repro.optim import sgd_momentum
+    from repro import checkpoint as CK
+
+    plan = None
+    if drop_rate or straggler_rate:
+        if scheme != "sfpl":
+            raise ValueError("elastic participation (drop/straggler rates) "
+                             "requires --scheme sfpl")
+        plan = FaultPlan(num_clients, seed=fault_seed, drop_rate=drop_rate,
+                         straggler_rate=straggler_rate,
+                         straggler_delay=straggler_delay)
 
     cfg = R.ResNetConfig(depth=depth, num_classes=num_clients, width=width)
     key = jax.random.PRNGKey(0)
@@ -135,6 +164,12 @@ def train_paper(*, num_clients=8, epochs=4, batch_size=8, sharded=False,
     opt = sgd_momentum(lr, momentum=0.9, weight_decay=5e-4)
     st = E.init_dcml_state(key, lambda k: R.init(k, cfg), num_clients,
                            opt, opt)
+
+    start_ep = 0
+    key = jax.random.PRNGKey(1)
+    if resume:
+        st, key, start_ep = CK.restore_train_state(resume, st, key_ref=key)
+        print(f"resumed from {resume} at epoch {start_ep}")
 
     if sharded:
         from repro.core import engine_dist as ED
@@ -170,20 +205,49 @@ def train_paper(*, num_clients=8, epochs=4, batch_size=8, sharded=False,
             k, s, data, split, opt, opt, num_clients=num_clients,
             batch_size=batch_size))
     else:
-        epoch = jax.jit(lambda k, s: E.sfpl_epoch(
+        dense = jax.jit(lambda k, s: E.sfpl_epoch(
             k, s, data, split, opt, opt, num_clients=num_clients,
             batch_size=batch_size, alpha=alpha))
+        masked = jax.jit(lambda k, s, m: E.sfpl_epoch(
+            k, s, data, split, opt, opt, num_clients=num_clients,
+            batch_size=batch_size, alpha=alpha, participation=m))
 
-    key = jax.random.PRNGKey(1)
+        def epoch(k, s, participation=None):
+            if participation is None:
+                return dense(k, s)
+            return masked(k, s, jnp.asarray(participation))
+
     t0 = time.time()
     mean_losses = []
-    for ep in range(epochs):
+    for ep in range(start_ep, epochs):
+        mask = None
+        if plan is not None:
+            mask, wait = plan.participation(
+                ep, straggler_timeout=straggler_timeout)
+            mask, revived = ensure_group_survivor(mask, num_clients,
+                                                  alpha=alpha)
+            if revived:
+                print(f"epoch {ep:3d} revived clients {revived} (their "
+                      f"flush group would have no survivor)", flush=True)
+            print(f"epoch {ep:3d} participation {int(mask.sum())}/"
+                  f"{num_clients} (straggler wait {wait:.2f}s)", flush=True)
+            if wait:
+                time.sleep(wait)
         key, ke = jax.random.split(key)
-        st, losses = epoch(ke, st)
+        if mask is None:
+            st, losses = epoch(ke, st)
+        else:
+            st, losses = epoch(ke, st, participation=mask)
         mean_losses.append(float(losses.mean()))
         if ep % log_every == 0 or ep == epochs - 1:
             print(f"epoch {ep:3d} loss {mean_losses[-1]:.4f} "
                   f"({time.time()-t0:.1f}s)", flush=True)
+        if ckpt and ckpt_every and (ep + 1) % ckpt_every == 0:
+            CK.save_train_state(ckpt, st, key=key, epoch=ep + 1)
+            print(f"epoch {ep:3d} checkpoint -> {ckpt}", flush=True)
+    if ckpt:
+        CK.save_train_state(ckpt, st, key=key, epoch=epochs)
+        print(f"saved final training state to {ckpt}")
     rep = evaluate_split_noniid(st, split, ex, ey, num_clients, rmsd=False,
                                 batch=2 * batch_size)
     print(f"non-IID accuracy {rep['accuracy']:.1f}% "
@@ -248,6 +312,33 @@ def main():
                          "exchange in bf16 (half the collector payload)")
     ap.add_argument("--clients", type=int, default=8)
     ap.add_argument("--epochs", type=int, default=4)
+    ap.add_argument("--ckpt-every", dest="ckpt_every", type=int, default=0,
+                    help="paper mode: save the full training state "
+                         "(params, optimizer, BN stats, PRNG key, epoch) "
+                         "to --ckpt every N epochs (0: final only)")
+    ap.add_argument("--resume",
+                    help="paper mode: restore a --ckpt training-state "
+                         "snapshot and continue from its epoch")
+    ap.add_argument("--straggler-timeout", dest="straggler_timeout",
+                    type=float, default=None,
+                    help="straggler policy: None waits for stragglers, a "
+                         "finite timeout drops-and-masks clients slower "
+                         "than it")
+    ap.add_argument("--drop-rate", dest="drop_rate", type=float,
+                    default=0.0,
+                    help="per-(epoch, client) dropout probability "
+                         "(deterministic FaultPlan; absent clients are "
+                         "masked out of the round)")
+    ap.add_argument("--straggler-rate", dest="straggler_rate", type=float,
+                    default=0.0,
+                    help="per-(epoch, client) straggler probability")
+    ap.add_argument("--straggler-delay", dest="straggler_delay", type=float,
+                    default=1.0,
+                    help="seconds a straggler lags (see "
+                         "--straggler-timeout)")
+    ap.add_argument("--fault-seed", dest="fault_seed", type=int, default=0,
+                    help="FaultPlan seed — the whole fault schedule is a "
+                         "pure function of (seed, epoch)")
     args = ap.parse_args()
     if args.paper:
         losses = train_paper(num_clients=args.clients, epochs=args.epochs,
@@ -258,13 +349,21 @@ def main():
                              pipeline=args.pipeline, submesh=args.submesh,
                              pods=args.pods,
                              compute_dtype=args.compute_dtype,
-                             lr=args.lr if args.lr is not None else 0.05)
+                             lr=args.lr if args.lr is not None else 0.05,
+                             ckpt=args.ckpt, ckpt_every=args.ckpt_every,
+                             resume=args.resume,
+                             straggler_timeout=args.straggler_timeout,
+                             drop_rate=args.drop_rate,
+                             straggler_rate=args.straggler_rate,
+                             straggler_delay=args.straggler_delay,
+                             fault_seed=args.fault_seed)
     else:
         losses = train_lm(args.arch, steps=args.steps, batch=args.batch,
                           seq=args.seq, smoke=args.smoke, sfpl=args.sfpl,
                           lr=args.lr if args.lr is not None else 3e-3,
                           optimizer=args.optimizer, ckpt=args.ckpt)
-    print(f"first loss {losses[0]:.4f} -> last loss {losses[-1]:.4f}")
+    if losses:
+        print(f"first loss {losses[0]:.4f} -> last loss {losses[-1]:.4f}")
 
 
 if __name__ == "__main__":

@@ -87,17 +87,18 @@ def _cd(policy):
     return policy.cdtype() if policy is not None and policy.mixed else None
 
 
-def _bn(p, s, x, *, training, rmsd, policy=None, relu=False):
+def _bn(p, s, x, *, training, rmsd, policy=None, relu=False, valid=None):
     if policy is None:
         y, ns = batchnorm_apply(p, s, x, training=training,
-                                use_running_stats=rmsd)
+                                use_running_stats=rmsd, valid=valid)
         if relu:
             y = jax.nn.relu(y)
         return y, ns
     return batchnorm_act_apply(p, s, x, training=training, relu=relu,
                                use_running_stats=rmsd,
                                use_kernel=policy.fused(),
-                               interpret=policy.kernel_interpret)
+                               interpret=policy.kernel_interpret,
+                               valid=valid)
 
 
 def client_apply(params, state, x, *, training=True, rmsd=None, policy=None):
@@ -114,25 +115,32 @@ def client_apply(params, state, x, *, training=True, rmsd=None, policy=None):
     return h, {"bn1": bn1}
 
 
-def _block_apply(p, s, x, stride, *, training, rmsd, policy=None):
+def _block_apply(p, s, x, stride, *, training, rmsd, policy=None, valid=None):
     ns = {}
     cd = _cd(policy)
     h = conv2d_apply(p["conv1"], x, stride=stride, compute_dtype=cd)
     h, ns["bn1"] = _bn(p["bn1"], s["bn1"], h, training=training, rmsd=rmsd,
-                       policy=policy, relu=True)
+                       policy=policy, relu=True, valid=valid)
     h = conv2d_apply(p["conv2"], h, compute_dtype=cd)
     h, ns["bn2"] = _bn(p["bn2"], s["bn2"], h, training=training, rmsd=rmsd,
-                       policy=policy)
+                       policy=policy, valid=valid)
     if "proj" in p:
         x = conv2d_apply(p["proj"], x, stride=stride, compute_dtype=cd)
         x, ns["bn_proj"] = _bn(p["bn_proj"], s["bn_proj"], x,
-                               training=training, rmsd=rmsd, policy=policy)
+                               training=training, rmsd=rmsd, policy=policy,
+                               valid=valid)
     return jax.nn.relu(h + x), ns
 
 
 def server_apply(params, state, a, cfg: ResNetConfig, *, training=True,
-                 rmsd=None, policy=None):
-    """a: smashed data (B, 32, 32, w) -> logits. Returns (logits, state)."""
+                 rmsd=None, policy=None, valid=None):
+    """a: smashed data (B, 32, 32, w) -> logits. Returns (logits, state).
+
+    ``valid`` (optional ``(B,)`` bool) marks rows that belong to absent
+    clients under elastic participation: they flow through the network
+    (shapes are static) but are excluded from every BN batch statistic,
+    so the server's state update matches a run on the surviving rows
+    alone."""
     ns = {}
     h = a if policy is None else policy.cast(a)
     for stage in range(3):
@@ -141,7 +149,7 @@ def server_apply(params, state, a, cfg: ResNetConfig, *, training=True,
             name = f"s{stage}b{b}"
             h, ns[name] = _block_apply(params[name], state[name], h, stride,
                                        training=training, rmsd=rmsd,
-                                       policy=policy)
+                                       policy=policy, valid=valid)
     h = jnp.mean(h, axis=(1, 2))
     return dense_apply(params["fc"], h, compute_dtype=_cd(policy)), ns
 

@@ -8,12 +8,34 @@ parameters and statistics independently.
 """
 from __future__ import annotations
 
+import math
+
 import jax.numpy as jnp
 
 from repro.nn.init import ones_init, zeros_init
 
 # --------------------------------------------------------------------------
 # BatchNorm
+
+
+def _batch_moments(x, axes, valid):
+    """f32 (mean, var) over ``axes``; rows with ``valid==False`` weightless.
+
+    ``valid=None`` is the dense path and stays bit-identical to
+    ``jnp.mean``/``jnp.var``.  With a ``(batch,)`` bool mask, masked rows
+    contribute exactly zero to both moments (multiplication by a 0/1 f32
+    weight is exact), so the statistics equal those of the surviving rows
+    alone — the property elastic participation's oracle parity rests on.
+    """
+    x32 = x.astype(jnp.float32)
+    if valid is None:
+        return jnp.mean(x32, axis=axes), jnp.var(x32, axis=axes)
+    w = valid.astype(jnp.float32).reshape((-1,) + (1,) * (x32.ndim - 1))
+    spatial = math.prod(x32.shape[i] for i in axes if i != 0)
+    cnt = jnp.maximum(jnp.sum(w), 1.0) * float(spatial)
+    mean = jnp.sum(x32 * w, axis=axes) / cnt
+    var = jnp.sum(w * jnp.square(x32 - mean), axis=axes) / cnt
+    return mean, var
 
 
 def batchnorm_init(key, dim, *, dtype=jnp.float32):
@@ -26,7 +48,7 @@ def batchnorm_init(key, dim, *, dtype=jnp.float32):
 
 
 def batchnorm_apply(params, state, x, *, training, momentum=0.9, eps=1e-5,
-                    use_running_stats=None):
+                    use_running_stats=None, valid=None):
     """Returns (y, new_state).
 
     ``use_running_stats`` controls the inference statistics source:
@@ -34,11 +56,15 @@ def batchnorm_apply(params, state, x, *, training, momentum=0.9, eps=1e-5,
       * False -> CMSD (current test-batch mean/var)        [paper Table VIII]
     Default at inference is RMSD; during training current-batch stats are
     always used for normalization while the running stats are updated.
+
+    ``valid`` (optional ``(batch,)`` bool) drops rows from the batch
+    statistics — the elastic-participation path where absent clients'
+    rows ride along in the pooled batch but must not perturb the moments.
+    ``valid=None`` is bit-identical to the dense computation.
     """
     axes = tuple(range(x.ndim - 1))
     if training:
-        mean = jnp.mean(x.astype(jnp.float32), axis=axes)
-        var = jnp.var(x.astype(jnp.float32), axis=axes)
+        mean, var = _batch_moments(x, axes, valid)
         new_state = {
             "mean": momentum * state["mean"] + (1 - momentum) * mean,
             "var": momentum * state["var"] + (1 - momentum) * var,
@@ -49,8 +75,7 @@ def batchnorm_apply(params, state, x, *, training, momentum=0.9, eps=1e-5,
         if rmsd:
             mean, var = state["mean"], state["var"]
         else:  # CMSD: statistics of the batch under test
-            mean = jnp.mean(x.astype(jnp.float32), axis=axes)
-            var = jnp.var(x.astype(jnp.float32), axis=axes)
+            mean, var = _batch_moments(x, axes, valid)
         new_state = state
     x32 = x.astype(jnp.float32)
     y = (x32 - mean) * (1.0 / jnp.sqrt(var + eps))
@@ -60,7 +85,7 @@ def batchnorm_apply(params, state, x, *, training, momentum=0.9, eps=1e-5,
 
 def batchnorm_act_apply(params, state, x, *, training, relu=True,
                         momentum=0.9, eps=1e-5, use_running_stats=None,
-                        use_kernel=False, interpret=False):
+                        use_kernel=False, interpret=False, valid=None):
     """BatchNorm + optional ReLU with the elementwise tail fused.
 
     Same statistics semantics as :func:`batchnorm_apply` (training batch
@@ -79,8 +104,7 @@ def batchnorm_act_apply(params, state, x, *, training, relu=True,
     """
     axes = tuple(range(x.ndim - 1))
     if training:
-        mean = jnp.mean(x.astype(jnp.float32), axis=axes)
-        var = jnp.var(x.astype(jnp.float32), axis=axes)
+        mean, var = _batch_moments(x, axes, valid)
         new_state = {
             "mean": momentum * state["mean"] + (1 - momentum) * mean,
             "var": momentum * state["var"] + (1 - momentum) * var,
@@ -91,8 +115,7 @@ def batchnorm_act_apply(params, state, x, *, training, relu=True,
         if rmsd:
             mean, var = state["mean"], state["var"]
         else:  # CMSD: statistics of the batch under test
-            mean = jnp.mean(x.astype(jnp.float32), axis=axes)
-            var = jnp.var(x.astype(jnp.float32), axis=axes)
+            mean, var = _batch_moments(x, axes, valid)
         new_state = state
     a = params["scale"].astype(jnp.float32) / jnp.sqrt(var + eps)
     b = params["bias"].astype(jnp.float32) - mean * a

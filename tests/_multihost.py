@@ -57,10 +57,16 @@ def free_port():
 
 
 def run_multiprocess(fn, *, num_processes=2, devices_per_process=4,
-                     timeout=1200):
+                     timeout=1200, strict=True):
     """Run ``fn`` in ``num_processes`` coordinated localhost JAX processes;
     returns ``[fn() result of process 0, ..., of process N-1]``. Raises
-    with both processes' combined output on any nonzero exit."""
+    with both processes' combined output on any nonzero exit.
+
+    ``strict=False`` is the fault-injection mode: a process that dies
+    (e.g. a ``FaultPlan`` self-SIGKILL) or hangs past ``timeout`` waiting
+    on a collective its dead peer will never join is tolerated — its slot
+    in the returned list is ``None`` — so a test can observe a crashed
+    round and then drive recovery from its checkpoints."""
     import cloudpickle
     # pickle the WHOLE function by value: test modules are importable from
     # the parent's rootdir but not from the child, and by-reference
@@ -84,11 +90,17 @@ def run_multiprocess(fn, *, num_processes=2, devices_per_process=4,
             [sys.executable, child, str(pid)], env=env, text=True,
             stdout=subprocess.PIPE, stderr=subprocess.STDOUT)
             for pid in range(num_processes)]
-        outs = []
+        outs = [""] * num_processes
         try:
-            for p in procs:
-                out, _ = p.communicate(timeout=timeout)
-                outs.append(out)
+            for i, p in enumerate(procs):
+                try:
+                    out, _ = p.communicate(timeout=timeout)
+                except subprocess.TimeoutExpired:
+                    if strict:
+                        raise
+                    p.kill()
+                    out, _ = p.communicate()
+                outs[i] = out
         finally:
             for p in procs:
                 if p.poll() is None:
@@ -96,11 +108,16 @@ def run_multiprocess(fn, *, num_processes=2, devices_per_process=4,
         report = "\n".join(f"--- process {i} (exit {p.returncode}) ---\n"
                            f"{out}" for i, (p, out)
                            in enumerate(zip(procs, outs)))
-        assert all(p.returncode == 0 for p in procs), report
-        assert all(f"MH-OK {i}" in outs[i]
-                   for i in range(num_processes)), report
+        if strict:
+            assert all(p.returncode == 0 for p in procs), report
+            assert all(f"MH-OK {i}" in outs[i]
+                       for i in range(num_processes)), report
         results = []
         for pid in range(num_processes):
-            with open(os.path.join(tmp, f"out-{pid}.pkl"), "rb") as f:
-                results.append(pickle.load(f))
+            path = os.path.join(tmp, f"out-{pid}.pkl")
+            if strict or os.path.exists(path):
+                with open(path, "rb") as f:
+                    results.append(pickle.load(f))
+            else:
+                results.append(None)
         return results

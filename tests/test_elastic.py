@@ -1,0 +1,213 @@
+"""Elastic-participation differential matrix on 8 forced CPU devices.
+
+One subprocess (fresh XLA_FLAGS before jax import) runs a masked epoch —
+clients [2, 6] absent, both alpha=0.5 flush groups keep survivors —
+through every collector strategy:
+
+  * DenseTake      — the unsharded single-device engine,
+  * MeshAllToAll   — the sync sharded collector on an 8-way mesh,
+  * StreamingAllToAll — double_buffered, sub-mesh and whole-mesh fallback,
+
+x alpha {0.5, 1.0}, and pins loss AND post-epoch state (client leaves at
+surviving indices, full server leaves) within 1e-5 of an ORACLE epoch
+run over only the surviving clients (shared broadcast init makes the
+restriction exact — absence must be indistinguishable from never having
+enrolled). A second worker proves full-state resume is BIT-compatible on
+the sharded mesh: save after epoch 0, restore into a fresh process-alike
+state, run epoch 1, and demand max|diff| == 0 against the uninterrupted
+run (same devices, same schedule — nothing may drift).
+"""
+import os
+import subprocess
+import sys
+
+WORKER_ELASTIC = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import engine as E
+from repro.core import engine_dist as ED
+from repro.data import make_synthetic_cifar, partition_positive_labels
+from repro.models import resnet as R
+from repro.optim import sgd_momentum
+
+V, B = 8, 8
+cfg = R.ResNetConfig(depth=8, num_classes=V, width=8)
+tx, ty, _, _ = make_synthetic_cifar(jax.random.PRNGKey(0), num_classes=V,
+                                    train_per_class=16, test_per_class=8,
+                                    hw=8)
+data = partition_positive_labels(tx, ty, V)
+split = E.make_resnet_split(cfg)
+opt = sgd_momentum(0.05, momentum=0.9, weight_decay=5e-4)
+init = lambda k: R.init(k, cfg)
+st0 = E.init_dcml_state(jax.random.PRNGKey(0), init, V, opt, opt)
+host = jax.tree_util.tree_map(np.asarray, st0)
+fresh = lambda: jax.tree_util.tree_map(jnp.asarray, host)
+ke = jax.random.PRNGKey(1)
+
+mask = np.array([1, 1, 0, 1, 1, 1, 0, 1], bool)
+surv = np.where(mask)[0]
+
+md = lambda a, b: max(
+    float(np.abs(np.asarray(x) - np.asarray(y)).max())
+    for x, y in zip(jax.tree_util.tree_leaves(a),
+                    jax.tree_util.tree_leaves(b)))
+take = lambda t: jax.tree_util.tree_map(lambda x: np.asarray(x)[surv], t)
+
+# oracle: the same problem restricted to the survivors
+def oracle(alpha):
+    st_o = E.init_dcml_state(jax.random.PRNGKey(0), init, len(surv),
+                             opt, opt)
+    data_o = {k: v[surv] for k, v in data.items()}
+    return jax.jit(lambda k, s: E.sfpl_epoch(
+        k, s, data_o, split, opt, opt, num_clients=len(surv),
+        batch_size=B, alpha=alpha))(ke, st_o)
+
+refs = {a: oracle(a) for a in (0.5, 1.0)}
+
+def check(name, alpha, st_m, l_m):
+    st_ref, l_ref = refs[alpha]
+    dl = md(l_m, l_ref)
+    dc = max(md(take(st_m[k]), st_ref[k]) for k in ("cp", "cbn"))
+    ds = max(md(st_m[k], st_ref[k]) for k in ("sp", "sbn"))
+    assert dl < 1e-5 and dc < 1e-5 and ds < 1e-5, (name, dl, dc, ds)
+    print("elastic OK", name, dl, dc, ds, flush=True)
+
+# DenseTake (unsharded single-device engine)
+for alpha in (0.5, 1.0):
+    st_m, l_m = jax.jit(lambda k, s, a=alpha: E.sfpl_epoch(
+        k, s, data, split, opt, opt, num_clients=V, batch_size=B,
+        alpha=a, participation=jnp.asarray(mask)))(ke, fresh())
+    check(f"dense-a{alpha}", alpha, st_m, l_m)
+
+# sharded collectors on the 8-way mesh
+mesh = ED.make_data_mesh(8)
+data_dev = ED.shard_client_data(data, mesh)
+cells = [("mesh-a2a", 1.0, {}), ("mesh-a2a", 0.5, {}),
+         ("stream-submesh", 0.5, dict(
+             collector_pipeline="double_buffered", collector_submesh=True)),
+         ("stream-fallback", 0.5, dict(
+             collector_pipeline="double_buffered",
+             collector_submesh=False)),
+         ("stream", 1.0, dict(collector_pipeline="double_buffered"))]
+for name, alpha, kw in cells:
+    sts = ED.shard_dcml_state(fresh(), mesh)
+    epoch = ED.make_sfpl_epoch_sharded(
+        split, opt, opt, data_dev, mesh=mesh, num_clients=V,
+        batch_size=B, alpha=alpha, **kw)
+    sts, ls = epoch(ke, sts, participation=mask)
+    check(f"{name}-a{alpha}", alpha, sts, ls)
+
+# the validated sharded entrypoint rejects a group-emptying mask eagerly
+epoch05 = ED.make_sfpl_epoch_sharded(
+    split, opt, opt, data_dev, mesh=mesh, num_clients=V, batch_size=B,
+    alpha=0.5)
+try:
+    epoch05(ke, ED.shard_dcml_state(fresh(), mesh),
+            participation=np.array([1, 1, 1, 1, 0, 0, 0, 0], bool))
+except ValueError as e:
+    assert "flush group 1" in str(e), e
+    print("elastic eager-reject OK", flush=True)
+else:
+    raise AssertionError("group-emptying mask was not rejected")
+print("all-elastic OK")
+"""
+
+WORKER_RESUME = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import tempfile
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import engine as E
+from repro.core import engine_dist as ED
+from repro.data import make_synthetic_cifar, partition_positive_labels
+from repro.models import resnet as R
+from repro.optim import sgd_momentum
+from repro import checkpoint as CK
+
+V, B = 8, 8
+cfg = R.ResNetConfig(depth=8, num_classes=V, width=8)
+tx, ty, _, _ = make_synthetic_cifar(jax.random.PRNGKey(0), num_classes=V,
+                                    train_per_class=16, test_per_class=8,
+                                    hw=8)
+data = partition_positive_labels(tx, ty, V)
+split = E.make_resnet_split(cfg)
+opt = sgd_momentum(0.05, momentum=0.9, weight_decay=5e-4)
+st0 = E.init_dcml_state(jax.random.PRNGKey(0), lambda k: R.init(k, cfg),
+                        V, opt, opt)
+host = jax.tree_util.tree_map(np.asarray, st0)
+fresh = lambda: jax.tree_util.tree_map(jnp.asarray, host)
+mask = np.array([1, 0, 1, 1, 1, 1, 1, 0], bool)
+
+mesh = ED.make_data_mesh(8)
+data_dev = ED.shard_client_data(data, mesh)
+epoch = ED.make_sfpl_epoch_sharded(split, opt, opt, data_dev, mesh=mesh,
+                                   num_clients=V, batch_size=B, alpha=0.5)
+
+def run(st, key, n, first_mask=None):
+    losses = []
+    for ep in range(n):
+        key, ke = jax.random.split(key)
+        m = first_mask if ep == 0 else None
+        st, ls = (epoch(ke, st) if m is None
+                  else epoch(ke, st, participation=m))
+        losses.append(np.asarray(ls))
+    return st, key, losses
+
+# uninterrupted: elastic epoch 0, dense epoch 1
+st_a, _, losses_a = run(ED.shard_dcml_state(fresh(), mesh),
+                        jax.random.PRNGKey(1), 2, first_mask=mask)
+
+# interrupted: epoch 0 only, full-state snapshot, then a RESTORED state
+# (host reference tree -> restore -> reshard) finishes epoch 1
+with tempfile.TemporaryDirectory() as tmp:
+    path = os.path.join(tmp, "state.npz")
+    st_b, key_b, _ = run(ED.shard_dcml_state(fresh(), mesh),
+                         jax.random.PRNGKey(1), 1, first_mask=mask)
+    CK.save_train_state(path, st_b, key=key_b, epoch=1)
+    del st_b
+    st_r, key_r, ep0 = CK.restore_train_state(path, fresh())
+    assert ep0 == 1, ep0
+    st_r = ED.shard_dcml_state(st_r, mesh)
+    st_r, _, losses_r = run(st_r, key_r, 1)
+
+md = lambda a, b: max(
+    float(np.abs(np.asarray(x) - np.asarray(y)).max())
+    for x, y in zip(jax.tree_util.tree_leaves(a),
+                    jax.tree_util.tree_leaves(b)))
+dl = float(np.abs(losses_r[0] - losses_a[1]).max())
+ds = md(st_r, st_a)
+assert dl == 0.0 and ds == 0.0, (dl, ds)
+print("resume bit-compat OK", dl, ds)
+"""
+
+
+def _run_worker(tmp_path, code, tokens, timeout=540):
+    w = tmp_path / "worker.py"
+    w.write_text(code)
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(os.path.dirname(__file__)), "src")
+    env["PYTHONPATH"] = os.pathsep.join(
+        [src] + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else []))
+    r = subprocess.run([sys.executable, str(w)], env=env,
+                       capture_output=True, text=True, timeout=timeout)
+    assert r.returncode == 0, r.stdout + r.stderr
+    for tok in tokens:
+        assert tok in r.stdout, r.stdout + r.stderr
+    return r.stdout
+
+
+def test_elastic_differential_matrix(tmp_path):
+    out = _run_worker(tmp_path, WORKER_ELASTIC,
+                      ["elastic OK dense-a0.5", "elastic OK dense-a1.0",
+                       "elastic OK mesh-a2a-a0.5",
+                       "elastic OK mesh-a2a-a1.0",
+                       "elastic OK stream-submesh-a0.5",
+                       "elastic OK stream-fallback-a0.5",
+                       "elastic OK stream-a1.0",
+                       "elastic eager-reject OK", "all-elastic OK"])
+    assert out.count("elastic OK ") == 7  # "all-elastic OK" not counted
+
+
+def test_sharded_resume_bit_compat(tmp_path):
+    _run_worker(tmp_path, WORKER_RESUME, ["resume bit-compat OK"])

@@ -1,0 +1,412 @@
+"""Fault-tolerance building blocks, cheapest-first on one CPU device:
+
+  1. ``core.retry`` — deterministic backoff schedules, the injectable
+     clock, and the ``RetryError`` budget contract;
+  2. ``core.faults.FaultPlan`` — the schedule is a pure function of
+     ``(seed, epoch)`` (any process reconstructs it), both straggler
+     policies, the kill schedule, and ``ensure_group_survivor``'s
+     revive-don't-crash degradation;
+  3. participation validation — ``check_participation`` rejects bad
+     shapes and fully-emptied flush groups EAGERLY (naming the group),
+     for 1-D and per-step 2-D masks, at the layout/fit entrypoints too;
+  4. checkpoint hardening — atomic tmp-then-replace with no tmp litter,
+     ValueError (not KeyError/silence) on missing leaves and shape
+     mismatches, and the full-train-state roundtrip (params + optimizer +
+     BN stats + PRNG key + epoch);
+  5. the elastic numerics — mean-over-valid loss rescale and
+     valid-weighted BN batch moments against compacted-row references,
+     and the DenseTake masked epoch against a surviving-clients oracle at
+     1e-5 (the single-device corner of the elastic differential matrix;
+     tests/test_elastic.py runs the sharded collectors).
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import collector as C
+from repro.core import engine_dist as ED
+from repro.core.faults import FaultPlan, ensure_group_survivor
+from repro.core.retry import RetryError, backoff_schedule, retry_call
+from repro.checkpoint import npz as CK
+from repro.models.common import softmax_cross_entropy
+from repro.nn.norm import _batch_moments
+
+
+# --------------------------------------------------------------------------
+# 1. retry/backoff
+
+
+def test_backoff_schedule_deterministic_and_bounded():
+    a = backoff_schedule(6, base_delay=0.5, max_delay=4.0, seed=3)
+    b = backoff_schedule(6, base_delay=0.5, max_delay=4.0, seed=3)
+    assert a == b and len(a) == 5  # N attempts -> N-1 sleeps
+    assert all(d <= 4.0 * 1.5 for d in a)
+    assert backoff_schedule(6, base_delay=0.5, max_delay=4.0, seed=4) != a
+    # jitter off: pure exponential, capped
+    assert backoff_schedule(5, base_delay=1.0, max_delay=4.0,
+                            jitter=0.0) == [1.0, 2.0, 4.0, 4.0]
+    assert backoff_schedule(1) == []
+
+
+def test_retry_call_succeeds_after_transient_failures():
+    calls, slept = [], []
+
+    def flaky():
+        calls.append(1)
+        if len(calls) < 3:
+            raise RuntimeError(f"transient {len(calls)}")
+        return "joined"
+
+    out = retry_call(flaky, attempts=5, base_delay=0.5, max_delay=8.0,
+                     seed=1, sleep=slept.append)
+    assert out == "joined" and len(calls) == 3
+    # it slept the first two delays of the deterministic schedule
+    assert slept == backoff_schedule(5, base_delay=0.5, max_delay=8.0,
+                                     seed=1)[:2]
+
+
+def test_retry_call_exhausts_budget():
+    slept = []
+
+    def dead():
+        raise ConnectionError("coordinator unreachable")
+
+    with pytest.raises(RetryError, match=r"3 attempt\(s\)") as ei:
+        retry_call(dead, attempts=3, sleep=slept.append,
+                   describe="join test")
+    assert ei.value.attempts == 3
+    assert isinstance(ei.value.last, ConnectionError)
+    assert "join test" in str(ei.value)
+    assert len(slept) == 2
+
+
+def test_retry_call_does_not_catch_unlisted_errors():
+    def typed():
+        raise ValueError("not transient")
+
+    with pytest.raises(ValueError, match="not transient"):
+        retry_call(typed, attempts=5, retry_on=(RuntimeError,),
+                   sleep=lambda _: None)
+
+
+# --------------------------------------------------------------------------
+# 2. FaultPlan
+
+
+def test_fault_plan_is_pure_function_of_seed_and_epoch():
+    a = FaultPlan(8, seed=5, drop_rate=0.4, straggler_rate=0.3)
+    b = FaultPlan(8, seed=5, drop_rate=0.4, straggler_rate=0.3)
+    for ep in range(4):
+        np.testing.assert_array_equal(a.available(ep), b.available(ep))
+        np.testing.assert_array_equal(a.delays(ep), b.delays(ep))
+    c = FaultPlan(8, seed=6, drop_rate=0.4, straggler_rate=0.3)
+    assert any(not np.array_equal(a.available(ep), c.available(ep))
+               for ep in range(8))
+    # epochs decorrelate too
+    assert any(not np.array_equal(a.available(0), a.available(ep))
+               for ep in range(1, 8))
+
+
+def test_fault_plan_straggler_policies():
+    plan = FaultPlan(8, seed=0, straggler_rate=1.0, straggler_delay=0.25)
+    # WAIT policy: everyone participates, host stalls for the slowest
+    mask, wait = plan.participation(0, straggler_timeout=None)
+    assert mask.all() and wait == 0.25
+    # DROP-AND-MASK: universal stragglers all exceed a tighter timeout
+    mask, wait = plan.participation(0, straggler_timeout=0.1)
+    assert not mask.any() and wait == 0.0
+    # a timeout above the delay keeps them (and waits for them)
+    mask, wait = plan.participation(0, straggler_timeout=0.5)
+    assert mask.all() and wait == 0.25
+    # no faults at all: full participation, zero wait
+    mask, wait = FaultPlan(8).participation(0)
+    assert mask.all() and wait == 0.0
+
+
+def test_fault_plan_kill_schedule():
+    plan = FaultPlan(8, kill_process=1, kill_epoch=2)
+    assert plan.should_kill(1, 2)
+    assert not plan.should_kill(0, 2)
+    assert not plan.should_kill(1, 1)
+    assert not FaultPlan(8).should_kill(0, 0)
+    # maybe_kill is a no-op off-schedule (it would SIGKILL us otherwise)
+    plan.maybe_kill(0, 2)
+    plan.maybe_kill(1, 0)
+
+
+def test_ensure_group_survivor():
+    # alpha=0.5 over 8 clients -> flush groups [0..3], [4..7]
+    mask, revived = ensure_group_survivor(
+        np.array([0, 0, 0, 0, 1, 0, 1, 0], bool), 8, alpha=0.5)
+    assert revived == [0]
+    np.testing.assert_array_equal(
+        mask, np.array([1, 0, 0, 0, 1, 0, 1, 0], bool))
+    # untouched when every group already has a survivor
+    ok = np.array([0, 1, 0, 0, 0, 0, 0, 1], bool)
+    mask, revived = ensure_group_survivor(ok, 8, alpha=0.5)
+    assert revived == [] and np.array_equal(mask, ok)
+    # all-dead draw: one revival per group
+    mask, revived = ensure_group_survivor(np.zeros(8, bool), 8, alpha=0.5)
+    assert revived == [0, 4] and mask.sum() == 2
+    with pytest.raises(ValueError, match="shape"):
+        ensure_group_survivor(np.ones(4, bool), 8)
+
+
+# --------------------------------------------------------------------------
+# 3. participation validation
+
+
+def test_check_participation_accepts_and_normalizes():
+    assert C.check_participation(8, None) is None
+    m = C.check_participation(8, [1, 0, 1, 1, 0, 1, 1, 1], alpha=0.5)
+    assert m.dtype == bool and m.shape == (8,)
+    # per-step 2-D masks validate every row
+    m2 = C.check_participation(
+        8, np.ones((3, 8), bool), alpha=0.5)
+    assert m2.shape == (3, 8)
+
+
+def test_check_participation_rejects_bad_masks():
+    with pytest.raises(ValueError, match=r"\(8,\)"):
+        C.check_participation(8, np.ones(4, bool))
+    with pytest.raises(ValueError, match="flush group 1"):
+        C.check_participation(8, [1, 1, 1, 1, 0, 0, 0, 0], alpha=0.5)
+    # 2-D: a later step emptying a group is still caught (named step)
+    bad = np.ones((3, 8), bool)
+    bad[2, :4] = False
+    with pytest.raises(ValueError, match="flush group 0"):
+        C.check_participation(8, bad, alpha=0.5)
+    # alpha=1.0 is one global group: at least one client must survive
+    with pytest.raises(ValueError, match="flush group 0"):
+        C.check_participation(4, np.zeros(4, bool))
+
+
+def test_layout_entrypoints_validate_participation_eagerly():
+    bad = np.array([1, 1, 1, 1, 0, 0, 0, 0], bool)
+    with pytest.raises(ValueError, match="flush group 1"):
+        ED.check_sfpl_layout(8, 8, 8, alpha=0.5, participation=bad)
+    # fit_shards must validate up front, NOT swallow the error into its
+    # 1-shard fallback
+    with pytest.raises(ValueError, match="flush group 1"):
+        ED.fit_shards(8, 8, alpha=0.5, participation=bad)
+    ok = np.array([1, 0, 0, 0, 0, 0, 0, 1], bool)
+    assert ED.fit_shards(8, 8, alpha=0.5, participation=ok) >= 1
+
+
+def test_participation_row_mask():
+    rows = C.participation_row_mask([1, 0, 1], 2)
+    np.testing.assert_array_equal(
+        np.asarray(rows), [True, True, False, False, True, True])
+
+
+# --------------------------------------------------------------------------
+# 4. checkpoint hardening + full-train-state roundtrip
+
+
+def test_checkpoint_atomic_no_tmp_litter(tmp_path):
+    path = str(tmp_path / "ck.npz")
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": {"c": jnp.ones((4,), jnp.bfloat16)}}
+    CK.save_checkpoint(path, tree, step=3)
+    assert os.path.exists(path)
+    assert [f for f in os.listdir(tmp_path)] == ["ck.npz"]  # no tmp files
+    out, step = CK.restore_checkpoint(path, tree)
+    assert step == 3
+    np.testing.assert_allclose(np.asarray(out["a"]), np.asarray(tree["a"]))
+    assert out["b"]["c"].dtype == jnp.bfloat16  # re-cast to the ref dtype
+
+
+def test_checkpoint_raises_on_mismatch(tmp_path):
+    path = str(tmp_path / "ck.npz")
+    CK.save_checkpoint(path, {"a": jnp.ones((2, 3))})
+    with pytest.raises(ValueError, match="shape"):
+        CK.restore_checkpoint(path, {"a": jnp.ones((3, 2))})
+    with pytest.raises(ValueError, match="no leaf"):
+        CK.restore_checkpoint(path, {"a": jnp.ones((2, 3)),
+                                     "zz": jnp.ones(())})
+
+
+def test_train_state_roundtrip(tmp_path):
+    from repro.core import engine as E
+    from repro.models import resnet as R
+    from repro.optim import sgd_momentum
+    cfg = R.ResNetConfig(depth=8, num_classes=4, width=8)
+    opt = sgd_momentum(0.05, momentum=0.9, weight_decay=5e-4)
+    st = E.init_dcml_state(jax.random.PRNGKey(0),
+                           lambda k: R.init(k, cfg), 4, opt, opt)
+    key = jax.random.fold_in(jax.random.PRNGKey(1), 7)
+    path = str(tmp_path / "state.npz")
+    CK.save_train_state(path, st, key=key, epoch=2)
+    ref = jax.tree_util.tree_map(jnp.zeros_like, st)
+    st2, key2, epoch = CK.restore_train_state(path, ref)
+    assert epoch == 2
+    np.testing.assert_array_equal(np.asarray(key2), np.asarray(key))
+    for a, b in zip(jax.tree_util.tree_leaves(st),
+                    jax.tree_util.tree_leaves(st2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # a plain param checkpoint is not a train-state snapshot
+    CK.save_checkpoint(str(tmp_path / "p.npz"), {"a": jnp.ones(())})
+    with pytest.raises(ValueError, match="no leaf"):
+        CK.restore_train_state(str(tmp_path / "p.npz"), {"a": jnp.ones(())})
+
+
+# --------------------------------------------------------------------------
+# 5. elastic numerics
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_mean_over_valid_loss_rescale(seed):
+    """Masking rows to IGNORE_LABEL == dropping them: the loss means over
+    the surviving rows only (the elastic rescale is exact, not 1/N)."""
+    rng = np.random.default_rng(seed)
+    n, v = 24, 5
+    logits = jnp.asarray(rng.normal(size=(n, v)), jnp.float32)
+    labels = jnp.asarray(rng.integers(0, v, size=(n,)), jnp.int32)
+    mask = jnp.asarray(rng.random(n) < 0.6)
+    if not bool(mask.any()):
+        mask = mask.at[0].set(True)
+    masked_labels = jnp.where(mask, labels, -100)
+    full = softmax_cross_entropy(logits, masked_labels)
+    keep = np.where(np.asarray(mask))[0]
+    compact = softmax_cross_entropy(logits[keep], labels[keep])
+    np.testing.assert_allclose(float(full), float(compact), rtol=1e-6)
+
+
+@pytest.mark.parametrize("seed", [0, 3])
+def test_valid_weighted_bn_moments(seed):
+    """_batch_moments with a 0/1 row weight == moments of the compacted
+    surviving rows (masked rows contribute exactly zero)."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(16, 4, 4, 3)), jnp.float32)
+    valid = jnp.asarray(rng.random(16) < 0.5)
+    if not bool(valid.any()):
+        valid = valid.at[0].set(True)
+    axes = (0, 1, 2)
+    m, v = _batch_moments(x, axes, valid)
+    keep = np.where(np.asarray(valid))[0]
+    m_ref, v_ref = _batch_moments(x[keep], axes, None)
+    np.testing.assert_allclose(np.asarray(m), np.asarray(m_ref),
+                               atol=1e-6)
+    np.testing.assert_allclose(np.asarray(v), np.asarray(v_ref),
+                               atol=1e-6)
+    # all-valid weight is bit-identical to the unweighted path
+    m1, v1 = _batch_moments(x, axes, jnp.ones(16, bool))
+    m0, v0 = _batch_moments(x, axes, None)
+    np.testing.assert_allclose(np.asarray(m1), np.asarray(m0), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v0), atol=1e-6)
+
+
+def _tiny_problem(num_clients, batch_size):
+    from repro.core import engine as E
+    from repro.data import make_synthetic_cifar, partition_positive_labels
+    from repro.models import resnet as R
+    from repro.optim import sgd_momentum
+    cfg = R.ResNetConfig(depth=8, num_classes=num_clients, width=8)
+    tx, ty, _, _ = make_synthetic_cifar(
+        jax.random.PRNGKey(0), num_classes=num_clients,
+        train_per_class=2 * batch_size, test_per_class=batch_size, hw=8)
+    data = partition_positive_labels(tx, ty, num_clients)
+    split = E.make_resnet_split(cfg)
+    opt = sgd_momentum(0.05, momentum=0.9, weight_decay=5e-4)
+    init = lambda k: R.init(k, cfg)
+    return E, data, split, opt, init
+
+
+def _tree_maxdiff(a, b):
+    return max(float(np.abs(np.asarray(x) - np.asarray(y)).max())
+               for x, y in zip(jax.tree_util.tree_leaves(a),
+                               jax.tree_util.tree_leaves(b)))
+
+
+def test_dense_take_masked_epoch_matches_surviving_oracle():
+    """Single-device elastic corner of the differential matrix: a masked
+    epoch == an epoch over only the surviving clients (loss + every state
+    leaf at surviving indices), and absent clients' state is FROZEN."""
+    V = B = 4
+    E, data, split, opt, init = _tiny_problem(V, B)
+    mask = np.array([1, 0, 1, 1], bool)   # alpha=0.5 groups [0,1], [2,3]
+    surv = np.where(mask)[0]
+    st0 = E.init_dcml_state(jax.random.PRNGKey(0), init, V, opt, opt)
+    ke = jax.random.PRNGKey(1)
+
+    st_m, l_m = jax.jit(lambda k, s: E.sfpl_epoch(
+        k, s, data, split, opt, opt, num_clients=V, batch_size=B,
+        alpha=0.5, participation=jnp.asarray(mask)))(ke, st0)
+
+    # oracle: the SAME problem restricted to the survivors (shared
+    # broadcast init makes per-client initial state identical)
+    st_o = E.init_dcml_state(jax.random.PRNGKey(0), init, len(surv),
+                             opt, opt)
+    data_o = {k: v[surv] for k, v in data.items()}
+    st_o, l_o = jax.jit(lambda k, s: E.sfpl_epoch(
+        k, s, data_o, split, opt, opt, num_clients=len(surv),
+        batch_size=B, alpha=0.5))(ke, st_o)
+
+    assert _tree_maxdiff(l_m, l_o) < 1e-5
+    take = lambda t: jax.tree_util.tree_map(lambda x: x[surv], t)
+    for leaf in ("cp", "cbn", "copt"):
+        assert _tree_maxdiff(take(st_m[leaf]), st_o[leaf]) < 1e-5, leaf
+    for leaf in ("sp", "sbn", "sopt"):
+        assert _tree_maxdiff(st_m[leaf], st_o[leaf]) < 1e-5, leaf
+    # the absent client's LOCAL state is frozen: BN stats, optimizer
+    # momentum, and BN params (excluded from ClientFedServer). Its non-BN
+    # params receive the epoch-end broadcast average — that is the global
+    # model it downloads on reconnect, already pinned to the oracle above.
+    from repro.core.bn_policy import is_bn_path
+    st0h = jax.tree_util.tree_map(np.asarray, st0)
+    for leaf in ("cbn", "copt"):
+        frozen = jax.tree_util.tree_map(lambda x: x[1], st_m[leaf])
+        ref = jax.tree_util.tree_map(lambda x: x[1], st0h[leaf])
+        assert _tree_maxdiff(frozen, ref) == 0.0, leaf
+    moved = jax.tree_util.tree_map_with_path(
+        lambda p, a, b: float(np.abs(np.asarray(a)[1] - b[1]).max())
+        if is_bn_path(p) else 0.0, st_m["cp"], st0h["cp"])
+    assert max(jax.tree_util.tree_leaves(moved)) == 0.0
+
+
+def test_per_step_mask_matches_per_epoch_mask():
+    """A (steps, num_clients) mask with identical rows == the 1-D mask."""
+    V = B = 4
+    E, data, split, opt, init = _tiny_problem(V, B)  # 2 steps per epoch
+    st0 = E.init_dcml_state(jax.random.PRNGKey(0), init, V, opt, opt)
+    ke = jax.random.PRNGKey(1)
+    mask1 = np.array([1, 1, 0, 1], bool)
+    mask2 = np.broadcast_to(mask1, (2, V)).copy()
+    run = lambda m: jax.jit(lambda k, s: E.sfpl_epoch(
+        k, s, data, split, opt, opt, num_clients=V, batch_size=B,
+        alpha=0.5, participation=jnp.asarray(m)))(ke, st0)
+    st_a, l_a = run(mask1)
+    st_b, l_b = run(mask2)
+    assert _tree_maxdiff(l_a, l_b) == 0.0
+    assert _tree_maxdiff(st_a, st_b) == 0.0
+
+
+def test_streaming_skip_of_fully_dropped_group_matches_dense():
+    """A STATIC mask that empties a whole flush group: the streamed
+    collector skips that group's exchange (only reachable via the direct
+    round API — the validated entrypoints forbid it) and still matches
+    the dense masked collector."""
+    from repro.core import round as RD
+    V = B = 4
+    E, data, split, opt, init = _tiny_problem(V, B)
+    mask = np.array([0, 0, 1, 1], bool)   # group 0 of alpha=0.5 is empty
+    st0 = E.init_dcml_state(jax.random.PRNGKey(0), init, V, opt, opt)
+    ke = jax.random.PRNGKey(1)
+
+    st_d, l_d = jax.jit(lambda k, s: RD.sfpl_round(
+        k, s, data, split, opt, opt, num_clients=V, batch_size=B,
+        collector=RD.SINGLE.collector(V, alpha=0.5),
+        participation=mask))(ke, st0)
+
+    mesh = ED.make_data_mesh(1)
+    coll = RD.StreamingAllToAll(mesh=mesh, num_clients=V, axis="data",
+                                alpha=0.5)
+    st_s, l_s = jax.jit(lambda k, s: RD.sfpl_round(
+        k, s, data, split, opt, opt, num_clients=V, batch_size=B,
+        collector=coll, participation=mask))(ke, st0)
+
+    assert _tree_maxdiff(l_s, l_d) < 1e-5
+    assert _tree_maxdiff(st_s, st_d) < 1e-5
