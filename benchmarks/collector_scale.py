@@ -42,6 +42,14 @@ one forward pool exchange from the epoch collector's own
 ``exchange_bytes`` (plan shapes are dtype-independent, so the bf16
 payload is exactly half the f32 payload at a matched config).
 
+The dense f32-compute legs are swept over ``--wire-dtype`` (default
+``float32 bfloat16 int8``): each name adds records whose exchange ships
+in that wire format (``core.wire`` — quantized wires carry 1 byte/elem
+plus 4 scale bytes/row, so the int8 payload lands near a quarter of the
+f32 payload at the bench's 512-element rows). Every record carries
+``wire_dtype``; the bf16-compute and degraded legs keep the identity
+wire ``"float32"`` (ship as computed).
+
 Every config is ALSO swept over ``--drop-clients`` (default ``0 1``):
 each ``k > 0`` adds a DEGRADED sync-pipeline record with the last ``k``
 clients masked out through the elastic participation path — masked rows
@@ -53,7 +61,7 @@ degraded quantity is throughput. Every record carries
 Run:  PYTHONPATH=src python benchmarks/collector_scale.py \
           [--epochs 2] [--alpha 0.5] [--out BENCH_collector.json] \
           [--use-kernel] [--compute-dtype {float32,bfloat16,both}] \
-          [--drop-clients 0 1]
+          [--drop-clients 0 1] [--wire-dtype float32 bfloat16 int8]
 Writes ``BENCH_collector.json`` (list of per-config records).
 """
 from __future__ import annotations
@@ -150,7 +158,7 @@ class PhaseTimers:
 
 
 def bench_phases(data_sh, split, opt, st_sh, mesh, num_clients, batch_size,
-                 *, use_kernel, alpha, pipeline):
+                 *, use_kernel, alpha, pipeline, wire_dtype="float32"):
     """Per-phase timings of the sharded SFPL step — perm build, route-plan
     build, plan exchange, server update — to localize where the
     wall-clock goes (the CPU-harness overhead recorded in
@@ -179,7 +187,8 @@ def bench_phases(data_sh, split, opt, st_sh, mesh, num_clients, batch_size,
     if pipeline == "submesh":
         coll = RD.DataMesh(mesh).collector(
             num_clients, alpha=alpha, use_kernel=use_kernel,
-            pipeline="double_buffered", submesh=True)
+            pipeline="double_buffered", submesh=True,
+            wire_dtype=wire_dtype)
         n_groups = len(coll.group_bounds(n_pool))
         required += [f"plan_build_g{g}_s" for g in range(n_groups)]
     else:
@@ -191,7 +200,8 @@ def bench_phases(data_sh, split, opt, st_sh, mesh, num_clients, batch_size,
         coll = RD.DataMesh(mesh).collector(
             num_clients, alpha=1.0, use_kernel=use_kernel,
             pipeline=pipeline,
-            submesh=False if pipeline == "double_buffered" else None)
+            submesh=False if pipeline == "double_buffered" else None,
+            wire_dtype=wire_dtype)
     timers = PhaseTimers(required)
 
     perm_fn = jax.jit(lambda k: coll.make_perm(k, n_pool))
@@ -239,7 +249,8 @@ def bench_phases(data_sh, split, opt, st_sh, mesh, num_clients, batch_size,
 
 
 def bench_config(num_clients, batch_size, *, epochs, use_kernel, alpha,
-                 compute_dtype="float32", drop_clients=0):
+                 compute_dtype="float32", drop_clients=0,
+                 wire_dtype="float32"):
     """Both pipeline records for one (clients, batch) config; the
     single-device reference epoch runs ONCE and is shared, so the two
     records carry a consistent baseline — but each pipeline's phases are
@@ -253,7 +264,16 @@ def bench_config(num_clients, batch_size, *, epochs, use_kernel, alpha,
     ``exchange_bytes`` is unchanged — the record logs that explicitly
     instead of silently under-reporting the degraded wire cost; only the
     sync pipeline is swept (the throughput question, not the overlap
-    one). Every record carries ``participation_rate`` and ``degraded``."""
+    one). Every record carries ``participation_rate`` and ``degraded``,
+    plus ``skipped_groups`` (always 0 here: ``ensure_group_survivor``
+    keeps at least one client per flush group, so the streamed skip fast
+    path — whose skipped groups ``exchange_bytes`` excludes — cannot
+    arise in this harness).
+
+    ``wire_dtype`` names the exchange's on-wire format (``core.wire``):
+    the epoch and the exchange-phase microbench both run with it, and
+    ``exchange_bytes`` counts wire bytes — int8 rows + the 4 scale
+    bytes/row sidecar for quantized wires."""
     from repro.core.faults import ensure_group_survivor
     cfg, data, split, opt, st0 = build(num_clients, batch_size,
                                        compute_dtype=compute_dtype)
@@ -315,7 +335,7 @@ def bench_config(num_clients, batch_size, *, epochs, use_kernel, alpha,
         phases = bench_phases(data_sh, split, opt, fresh_sharded(), mesh,
                               num_clients, batch_size,
                               use_kernel=use_kernel, alpha=alpha,
-                              pipeline=pipeline)
+                              pipeline=pipeline, wire_dtype=wire_dtype)
         # the double_buffered record stays the whole-mesh fallback
         # (submesh=False) so it keeps measuring the b_g + 1 buffers the
         # submesh record is compared against
@@ -328,7 +348,7 @@ def bench_config(num_clients, batch_size, *, epochs, use_kernel, alpha,
         sharded = ED.make_sfpl_epoch_sharded(
             split, opt, opt, data_sh, mesh=mesh, num_clients=num_clients,
             batch_size=batch_size, use_kernel=use_kernel, alpha=alpha,
-            **pipe_kw)
+            wire_dtype=wire_dtype, **pipe_kw)
         step = (sharded if part is None
                 else (lambda k, s: sharded(k, s, participation=part)))
         t_sharded, l_sharded = time_epochs(step, key, fresh_sharded(),
@@ -338,6 +358,7 @@ def bench_config(num_clients, batch_size, *, epochs, use_kernel, alpha,
         # pinned-alpha phases collector above
         epoch_coll = RD.DataMesh(mesh).collector(
             num_clients, alpha=alpha, use_kernel=use_kernel,
+            wire_dtype=wire_dtype,
             **{"sync": {},
                "double_buffered": dict(pipeline="double_buffered",
                                        submesh=False),
@@ -354,9 +375,14 @@ def bench_config(num_clients, batch_size, *, epochs, use_kernel, alpha,
             "alpha": alpha,
             "pipeline": pipeline,
             "compute_dtype": compute_dtype,
+            "wire_dtype": wire_dtype,
             "participation_rate": participation_rate,
             "degraded": bool(part is not None),
             "dropped_clients": int(drop_clients),
+            # always 0 here: ensure_group_survivor guarantees every flush
+            # group a survivor, so no group's exchange is skipped (the
+            # skip-aware exchange_bytes would exclude skipped groups)
+            "skipped_groups": 0,
             "exchange_bytes": int(epoch_coll.exchange_bytes(
                 eprep, row_elems, exchange_dtype)),
             "epochs": epochs,
@@ -372,7 +398,8 @@ def bench_config(num_clients, batch_size, *, epochs, use_kernel, alpha,
                                                    group_rows)
         print(f"N={num_clients:3d} B={batch_size:3d} "
               f"pooled={rec['pooled_batch']:4d} {pipeline:15s} "
-              f"{compute_dtype:8s} exch {rec['exchange_bytes']:8d}B  "
+              f"{compute_dtype:8s} wire={wire_dtype:11s} "
+              f"exch {rec['exchange_bytes']:8d}B  "
               f"single {t_single:.3f}s  sharded {t_sharded:.3f}s  "
               f"dloss {rec['max_loss_delta']:.2e}  "
               f"[perm {phases['perm_build_s']*1e3:.1f}ms | plan "
@@ -421,6 +448,15 @@ def main():
                          "masked out (masked rows still travel — "
                          "exchange_bytes is unchanged, throughput is the "
                          "degraded quantity)")
+    from repro.core.wire import WIRE_DTYPE_NAMES
+    ap.add_argument("--wire-dtype", dest="wire_dtypes", nargs="*",
+                    default=["float32", "bfloat16", "int8"],
+                    choices=WIRE_DTYPE_NAMES,
+                    help="wire-format sweep (core.wire): each name adds a "
+                         "record leg whose exchange ships in that dtype; "
+                         "swept on the dense f32-compute legs (wire "
+                         "'float32' = ship as computed, so every "
+                         "bf16-compute/degraded record still carries it)")
     args = ap.parse_args()
     dtypes = (("float32", "bfloat16") if args.compute_dtype == "both"
               else (args.compute_dtype,))
@@ -445,10 +481,19 @@ def main():
                 continue
             for cd in dtypes:
                 for k in args.drop_clients:
-                    records.extend(bench_config(
-                        n, b, epochs=args.epochs,
-                        use_kernel=args.use_kernel, alpha=args.alpha,
-                        compute_dtype=cd, drop_clients=k))
+                    # wire sweep on the dense f32-compute legs only: the
+                    # quantized-wire question is byte ratio + overhead at
+                    # a matched config, not its cross product with the
+                    # bf16-compute and degradation axes
+                    wires = (args.wire_dtypes
+                             if cd == "float32" and k == 0
+                             else ["float32"])
+                    for w in wires:
+                        records.extend(bench_config(
+                            n, b, epochs=args.epochs,
+                            use_kernel=args.use_kernel, alpha=args.alpha,
+                            compute_dtype=cd, drop_clients=k,
+                            wire_dtype=w))
     out = {
         "bench": "collector_scale",
         "devices": len(jax.devices()),

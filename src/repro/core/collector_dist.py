@@ -106,6 +106,9 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.kernels._compat import get_shard_map
+from repro.core.wire import (SCALE_BYTES, SCALE_LANES, WIRE_DTYPES,
+                             is_quantized, pack_scales, resolve_wire_dtype,
+                             unpack_scales, wire_itemsize)
 
 
 def make_balanced_perm(key, n, num_shards):
@@ -609,6 +612,59 @@ def _gather_rows(x, idx, *, use_kernel, bucket_shape=None):
     return x[idx]
 
 
+def _resolve_wire(x_dtype, wire_dtype):
+    """Effective wire dtype name for one payload, or ``None`` to ship it
+    as-is: no wire dtype requested, a NON-FLOATING payload (the label pool
+    rides the same plans — int rows never quantize, mirroring the kernel
+    gate), or a wire dtype the payload already is in (the bf16 compute
+    path ships bf16 natively; re-casting would be a no-op)."""
+    wire = resolve_wire_dtype(wire_dtype)
+    if wire is None or not jnp.issubdtype(x_dtype, jnp.floating):
+        return None
+    if jnp.dtype(WIRE_DTYPES[wire]) == jnp.dtype(x_dtype):
+        return None
+    return wire
+
+
+def _quant_send_payload(x_loc, send_idx, S, cap, wire, use_kernel):
+    """Send side of a quantized exchange: fused quantize-gather of the
+    local rows into bucket order, with each row's f32 scale bitcast into
+    ``SCALE_LANES`` trailing one-byte columns — ``(S*cap, d + LANES)``,
+    ONE wire-dtype operand for the ``all_to_all`` (the scale sidecar
+    never becomes a second collective)."""
+    if use_kernel:
+        from repro.kernels.quant_permute.ops import quant_bucket_permute
+        q, scales = quant_bucket_permute(
+            x_loc, send_idx.reshape(S, cap), wire_dtype=wire,
+            interpret=jax.default_backend() != "tpu")
+    else:
+        from repro.kernels.quant_permute.ref import quant_bucket_permute_ref
+        x2 = x_loc.reshape(x_loc.shape[0], -1)
+        q, scales = quant_bucket_permute_ref(x2, send_idx, wire)
+    return jnp.concatenate([q, pack_scales(scales, wire)], axis=1)
+
+
+def _dequant_recv_payload(flat, recv_idx, wire, out_dtype, feat_shape,
+                          use_kernel):
+    """Receive side: split the flat ``(R, d + LANES)`` wire block back
+    into rows and scales, and fused dequantize-gather into output order
+    in the compute dtype. The slack pad row is all-zero — its packed
+    scale unpacks to 0.0, so dropped rows dequantize to exact zeros."""
+    d = flat.shape[1] - SCALE_LANES
+    q, lanes = flat[:, :d], flat[:, d:]
+    scales = unpack_scales(lanes)
+    if use_kernel:
+        from repro.kernels.quant_permute.ops import dequant_unbucket_permute
+        out2 = dequant_unbucket_permute(
+            q, scales, recv_idx, out_dtype=jnp.dtype(out_dtype),
+            interpret=jax.default_backend() != "tpu")
+    else:
+        from repro.kernels.quant_permute.ref import (
+            dequant_unbucket_permute_ref)
+        out2 = dequant_unbucket_permute_ref(q, scales, recv_idx, out_dtype)
+    return out2.reshape((recv_idx.shape[0],) + feat_shape)
+
+
 def _plan_exchange_spec(plan):
     """(bucket shard count, cap) shaping a plan's send/receive buckets:
     whole-mesh plans exchange ``(n_shards, cap)`` blocks, sub-mesh plans
@@ -655,19 +711,32 @@ def _plan_collective(plan, mesh, axis):
     return names[-1], submesh_axis_groups(inner, plan.slice_size)
 
 
-def plan_payload_bytes(plan, row_elems, itemsize):
+def plan_payload_bytes(plan, row_elems, itemsize, *, wire_dtype=None):
     """Wire bytes of ONE collective under a plan: every one of the
     ``n_shards`` participating shards ships its ``(S, cap)`` bucket block
     — ``S = slice_size`` under sub-mesh ``axis_index_groups``, else the
     whole axis — of ``row_elems``-element rows at ``itemsize`` bytes per
     element. Shapes are dtype-independent, so a bf16 exchange is exactly
-    half the f32 bytes at a matched plan."""
+    half the f32 bytes at a matched plan.
+
+    ``wire_dtype`` overrides ``itemsize`` with the wire format's exact
+    accounting: rows ship at the wire itemsize, and quantized wires add
+    ``SCALE_BYTES`` per row (the bitcast f32 scale lanes packed into the
+    payload operand) — int8 rows cost ``row_elems + 4`` bytes against
+    f32's ``4 * row_elems``."""
     S, cap = _plan_exchange_spec(plan)
-    return plan.n_shards * S * cap * row_elems * itemsize
+    rows = plan.n_shards * S * cap
+    wire = resolve_wire_dtype(wire_dtype)
+    if wire is None:
+        return rows * row_elems * itemsize
+    row_bytes = row_elems * wire_itemsize(wire)
+    if is_quantized(wire):
+        row_bytes += SCALE_BYTES
+    return rows * row_bytes
 
 
 def plan_exchange(x, plan, *, mesh, axis="data", use_kernel=False,
-                  check_capacity=False):
+                  check_capacity=False, wire_dtype=None):
     """One full exchange under a route plan: bucket-gather this shard's
     rows into send layout, ship them with ONE ``all_to_all``, and gather
     the received block into output order. Not differentiable on its own —
@@ -686,10 +755,21 @@ def plan_exchange(x, plan, *, mesh, axis="data", use_kernel=False,
     on a pool-width input only the owning slice's output rows are
     meaningful; the caller masks the rest. ``axis`` may be the pod-major
     name tuple of a 2-D mesh (``_plan_collective`` picks the collective
-    scope)."""
+    scope).
+
+    ``wire_dtype`` narrows the payload that crosses the collective (see
+    ``core.wire``): bf16 is a cast around the unchanged exchange;
+    int8/fp8 swap the two gathers for the fused quantize/dequantize
+    gathers, with the per-row f32 scales bitcast into ``SCALE_LANES``
+    trailing payload columns — still exactly ONE ``all_to_all``, its
+    operand in the wire dtype. Non-floating payloads (the label pool)
+    ship as-is regardless."""
     S, cap = _plan_exchange_spec(plan)
     coll_axis, groups = _plan_collective(plan, mesh, axis)
     check = check_capacity and plan.overflow is not None
+    wire = _resolve_wire(x.dtype, wire_dtype)
+    quant = wire is not None and is_quantized(wire)
+    out_dtype, feat_shape = x.dtype, x.shape[1:]
 
     def local(x_loc, send_idx, recv_idx, *overflow):
         if check:
@@ -697,7 +777,20 @@ def plan_exchange(x, plan, *, mesh, axis="data", use_kernel=False,
             # participants abort together instead of deadlocking the
             # all_to_all rendezvous on the survivors
             jax.debug.callback(_raise_on_overflow, overflow[0])
-        bucket = _gather_rows(x_loc, send_idx[0], use_kernel=use_kernel,
+        if quant:
+            payload = _quant_send_payload(x_loc, send_idx[0], S, cap,
+                                          wire, use_kernel)
+            recv = jax.lax.all_to_all(
+                payload.reshape((S, cap, payload.shape[1])), coll_axis,
+                0, 0, tiled=False, axis_index_groups=groups)
+            flat = recv.reshape((S * cap, payload.shape[1]))
+            if plan.may_drop:
+                flat = jnp.concatenate(
+                    [flat, jnp.zeros((1,) + flat.shape[1:], flat.dtype)])
+            return _dequant_recv_payload(flat, recv_idx[0], wire,
+                                         out_dtype, feat_shape, use_kernel)
+        x_w = x_loc.astype(WIRE_DTYPES[wire]) if wire else x_loc
+        bucket = _gather_rows(x_w, send_idx[0], use_kernel=use_kernel,
                               bucket_shape=(S, cap))
         recv = jax.lax.all_to_all(
             bucket.reshape((S, cap) + x_loc.shape[1:]), coll_axis, 0, 0,
@@ -706,7 +799,8 @@ def plan_exchange(x, plan, *, mesh, axis="data", use_kernel=False,
         if plan.may_drop:
             flat = jnp.concatenate(
                 [flat, jnp.zeros((1,) + flat.shape[1:], flat.dtype)])
-        return _gather_rows(flat, recv_idx[0], use_kernel=use_kernel)
+        out = _gather_rows(flat, recv_idx[0], use_kernel=use_kernel)
+        return out.astype(out_dtype) if wire else out
 
     ex = _shard_map_maybe_norep(
         local, mesh=mesh,
@@ -717,27 +811,42 @@ def plan_exchange(x, plan, *, mesh, axis="data", use_kernel=False,
 
 
 def plan_exchange_issue(x, plan, *, mesh, axis="data", use_kernel=False,
-                        check_capacity=False):
+                        check_capacity=False, wire_dtype=None):
     """First (issue) half of the split exchange: bucket-gather this shard's
     rows by destination and hand them to ``all_to_all``.
 
-    Returns the in-flight buffer slot — ``(recv, plan)`` where ``recv`` is
-    the received bucket block (leading dim sharded over ``axis``). Unlike
-    the pre-plan exchange, the slot is ONE array: positions and validity
-    never travel over the wire, the completion side derives placement from
-    the plan. Nothing about the slot depends on later compute, so a
-    scheduler is free to overlap the collective with whatever runs between
-    ``issue`` and ``complete`` — the hook the double-buffered streaming
-    collector pipelines client forwards into. A sub-mesh plan's collective
-    runs under ``axis_index_groups`` of the owning slice's width."""
+    Returns the in-flight buffer slot — ``(recv, plan, wire_ctx)`` where
+    ``recv`` is the received bucket block (leading dim sharded over
+    ``axis``) and ``wire_ctx`` is ``None`` or the static ``(wire name,
+    compute dtype, feature shape)`` the completion side needs to undo the
+    wire format — under a quantized wire ``recv`` is the packed
+    wire-dtype block (rows + bitcast scale lanes), so neither the compute
+    dtype nor the feature shape is recoverable from the array itself.
+    The payload stays ONE array: positions and validity never travel over
+    the wire, the completion side derives placement from the plan.
+    Nothing about the slot depends on later compute, so a scheduler is
+    free to overlap the collective with whatever runs between ``issue``
+    and ``complete`` — the hook the double-buffered streaming collector
+    pipelines client forwards into. A sub-mesh plan's collective runs
+    under ``axis_index_groups`` of the owning slice's width."""
     S, cap = _plan_exchange_spec(plan)
     coll_axis, groups = _plan_collective(plan, mesh, axis)
     check = check_capacity and plan.overflow is not None
+    wire = _resolve_wire(x.dtype, wire_dtype)
+    quant = wire is not None and is_quantized(wire)
+    ctx = None if wire is None else (wire, x.dtype, x.shape[1:])
 
     def local(x_loc, send_idx, *overflow):
         if check:
             jax.debug.callback(_raise_on_overflow, overflow[0])
-        bucket = _gather_rows(x_loc, send_idx[0], use_kernel=use_kernel,
+        if quant:
+            payload = _quant_send_payload(x_loc, send_idx[0], S, cap,
+                                          wire, use_kernel)
+            return jax.lax.all_to_all(
+                payload.reshape((S, cap, payload.shape[1])), coll_axis,
+                0, 0, tiled=False, axis_index_groups=groups)
+        x_w = x_loc.astype(WIRE_DTYPES[wire]) if wire else x_loc
+        bucket = _gather_rows(x_w, send_idx[0], use_kernel=use_kernel,
                               bucket_shape=(S, cap))
         return jax.lax.all_to_all(
             bucket.reshape((S, cap) + x_loc.shape[1:]), coll_axis, 0, 0,
@@ -748,21 +857,30 @@ def plan_exchange_issue(x, plan, *, mesh, axis="data", use_kernel=False,
         in_specs=(P(axis), P(axis)) + ((P(),) if check else ()),
         out_specs=P(axis), norep=use_kernel)
     return issue(*(x, plan.send_idx)
-                 + ((plan.overflow,) if check else ())), plan
+                 + ((plan.overflow,) if check else ())), plan, ctx
 
 
 def plan_exchange_complete(slot, *, mesh, axis="data", use_kernel=False):
     """Second (complete) half: gather the received bucket block of a
-    ``plan_exchange_issue`` slot into local output order."""
-    recv, plan = slot
+    ``plan_exchange_issue`` slot into local output order, undoing the
+    slot's wire format (cast back, or unpack scales + fused dequantize
+    gather) into the compute dtype it was issued from."""
+    recv, plan, ctx = slot
     S, cap = _plan_exchange_spec(plan)
+    wire = None if ctx is None else ctx[0]
+    quant = wire is not None and is_quantized(wire)
 
     def local(recv, recv_idx):
         flat = recv.reshape((S * cap,) + recv.shape[2:])
         if plan.may_drop:
             flat = jnp.concatenate(
                 [flat, jnp.zeros((1,) + flat.shape[1:], flat.dtype)])
-        return _gather_rows(flat, recv_idx[0], use_kernel=use_kernel)
+        if quant:
+            _, out_dtype, feat_shape = ctx
+            return _dequant_recv_payload(flat, recv_idx[0], wire,
+                                         out_dtype, feat_shape, use_kernel)
+        out = _gather_rows(flat, recv_idx[0], use_kernel=use_kernel)
+        return out.astype(ctx[1]) if wire else out
 
     complete = _shard_map_maybe_norep(
         local, mesh=mesh, in_specs=(P(axis), P(axis)),
@@ -771,7 +889,7 @@ def plan_exchange_complete(slot, *, mesh, axis="data", use_kernel=False):
 
 
 def plan_shuffle(x, plans, *, mesh, axis="data", use_kernel=False,
-                 check_capacity=False):
+                 check_capacity=False, wire_dtype=None, wire_dtype_bwd=None):
     """Differentiable plan exchange: ``plans`` is the ``(forward,
     backward)`` pair from ``build_route_plans``. The registered VJP is the
     plan exchange with the BACKWARD plan (Algorithm 1's de-shuffle) —
@@ -779,21 +897,30 @@ def plan_shuffle(x, plans, *, mesh, axis="data", use_kernel=False,
     more ``all_to_all`` and re-derives no routing metadata. The VJP is
     registered at this level — not inside the shard_map body — because
     per-shard (data-dependent) custom_vjp residuals do not survive
-    shard_map transposition with replication checking off."""
+    shard_map transposition with replication checking off.
+
+    ``wire_dtype`` narrows the forward payload; gradients are
+    STRAIGHT-THROUGH w.r.t. the dequantized values — the backward
+    exchange routes cotangents of what the receiver actually saw, and is
+    itself exact unless ``wire_dtype_bwd`` opts the gradient rows into a
+    narrow wire too (the two legs are independent knobs because gradient
+    rows are usually the more quantization-sensitive leg)."""
     impl = functools.partial(plan_exchange, mesh=mesh, axis=axis,
                              use_kernel=use_kernel)
 
     @jax.custom_vjp
     def shuf(x, fwd_plan, bwd_plan):
-        return impl(x, fwd_plan, check_capacity=check_capacity)
+        return impl(x, fwd_plan, check_capacity=check_capacity,
+                    wire_dtype=wire_dtype)
 
     def shuf_fwd(x, fwd_plan, bwd_plan):
-        return impl(x, fwd_plan, check_capacity=check_capacity), bwd_plan
+        return impl(x, fwd_plan, check_capacity=check_capacity,
+                    wire_dtype=wire_dtype), bwd_plan
 
     def shuf_bwd(bwd_plan, g):
         # exact for drop-free plans; under bucket overflow the forward
         # already lost rows (see check_capacity), so exactness is moot
-        return impl(g, bwd_plan), None, None
+        return impl(g, bwd_plan, wire_dtype=wire_dtype_bwd), None, None
 
     shuf.defvjp(shuf_fwd, shuf_bwd)
     return shuf(x, *plans)
@@ -836,7 +963,7 @@ def exchange_issue(x, perm, *, mesh, axis="data", slack=2.0,
                    use_kernel=False, check_capacity=False):
     """Perm-level convenience for ``plan_exchange_issue``: builds the
     forward plan at the slack-derived capacity and issues the exchange.
-    Returns the in-flight ``(recv, plan)`` slot."""
+    Returns the in-flight ``(recv, plan, wire_ctx)`` slot."""
     n = x.shape[0]
     n_shards = mesh_axis_size(mesh, axis)
     cap = pair_capacity(n, n_shards, slack)
@@ -851,6 +978,6 @@ def exchange_complete(slot, n, *, mesh, axis="data"):
     global row count of the shuffled array (checked against the slot's
     plan). ``exchange_complete(exchange_issue(x, perm, ...), x.shape[0],
     ...)`` equals ``shuffle_shard_map(x, perm, ...)`` row for row."""
-    _, plan = slot
+    _, plan, _ = slot
     assert plan.n == n, (plan.n, n)
     return plan_exchange_complete(slot, mesh=mesh, axis=axis)

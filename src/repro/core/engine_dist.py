@@ -51,6 +51,7 @@ from repro.core import round as RD
 from repro.core.collector_dist import (group_fits_slabs, mesh_axis_size,
                                        submesh_slice_size)
 from repro.core.engine import SplitModel, make_client_update  # noqa: F401
+from repro.core.wire import resolve_wire_dtype
 
 
 def make_data_mesh(num_shards=None, *, pods=None, axis="data",
@@ -115,7 +116,8 @@ def check_sfpl_layout(num_clients, batch_size, n_shards, *, alpha=1.0,
                       collector_mode="balanced",
                       collector_pipeline="sync",
                       collector_submesh=None, pods=None,
-                      participation=None):
+                      participation=None, wire_dtype=None,
+                      wire_dtype_bwd=None):
     """Eager validation of the sharded SFPL layout; raises ValueError with
     an actionable message before any device work.
 
@@ -150,8 +152,19 @@ def check_sfpl_layout(num_clients, batch_size, n_shards, *, alpha=1.0,
     with zero surviving clients, raises a ValueError naming the group
     (``collector.check_participation``).
 
+    ``wire_dtype`` / ``wire_dtype_bwd`` (the exchange wire-format knobs
+    — see ``core.wire``) are name-checked here too, so a launcher typo
+    fails with the supported set before any device work:
+
+    >>> check_sfpl_layout(8, 8, 8, wire_dtype="int4")  # doctest: +ELLIPSIS
+    Traceback (most recent call last):
+        ...
+    ValueError: unknown wire_dtype 'int4': expected one of ...
+
     Returns the flush-group row counts of the accepted layout:
 
+    >>> check_sfpl_layout(8, 8, 8, wire_dtype="int8")
+    [64]
     >>> check_sfpl_layout(8, 8, 8)
     [64]
     >>> check_sfpl_layout(8, 8, 8, alpha=0.5,
@@ -178,6 +191,8 @@ with the slab divisible by that span — pod-local (the whole mesh, or \
 dividing the 1 shards per pod) when pods=4; got mode='balanced', group \
 sizes [32, 32] over 4 shards (num_clients=8, batch_size=8, alpha=0.5)
     """
+    resolve_wire_dtype(wire_dtype)
+    resolve_wire_dtype(wire_dtype_bwd)
     if num_clients % n_shards:
         raise ValueError(
             f"num_clients={num_clients} must divide evenly over "
@@ -251,7 +266,7 @@ sizes [32, 32] over 4 shards (num_clients=8, batch_size=8, alpha=0.5)
 def fit_shards(num_clients, batch_size, *, scheme="sfpl", alpha=1.0,
                collector_mode="balanced", collector_pipeline="sync",
                collector_submesh=None, pods=None, max_shards=None,
-               participation=None):
+               participation=None, wire_dtype=None, wire_dtype_bwd=None):
     """Largest shard count (up to the visible devices) the layout supports
     — shared by the launch drivers so every entrypoint degrades to a
     smaller mesh instead of crashing on indivisible configurations. With
@@ -259,10 +274,13 @@ def fit_shards(num_clients, batch_size, *, scheme="sfpl", alpha=1.0,
     slices are considered (``make_data_mesh(s, pods=pods)`` must be
     buildable), and sub-mesh qualification is checked pod-locally.
 
-    ``participation`` is validated ONCE up front (the check is
-    shard-independent): a bad mask raises immediately instead of being
-    swallowed by the per-shard-count search and silently degrading to
-    the 1-shard fallback."""
+    ``participation`` and the wire-dtype names are validated ONCE up
+    front (both checks are shard-independent): a bad mask or a wire
+    typo raises immediately instead of being swallowed by the
+    per-shard-count search and silently degrading to the 1-shard
+    fallback."""
+    resolve_wire_dtype(wire_dtype)
+    resolve_wire_dtype(wire_dtype_bwd)
     if participation is not None:
         C.check_participation(num_clients, participation, alpha=alpha)
     max_shards = max_shards or len(jax.devices())
@@ -293,7 +311,8 @@ def sfpl_epoch_sharded(key, st, data, split: SplitModel, opt_c, opt_s, *,
                        check_capacity=False, axis=None,
                        collector_mode="balanced",
                        collector_pipeline="sync", stream_slack=None,
-                       collector_submesh=None, participation=None):
+                       collector_submesh=None, participation=None,
+                       wire_dtype=None, wire_dtype_bwd=None):
     """Drop-in sharded replacement for ``engine.sfpl_epoch``.
 
     Shape/layout contract: ``st`` is an ``init_dcml_state`` tree placed by
@@ -340,6 +359,13 @@ def sfpl_epoch_sharded(key, st, data, split: SplitModel, opt_c, opt_s, *,
     validated eagerly against the flush-group structure; a traced mask
     (already inside a jit) skips the eager check, which the jitting
     caller must then run itself (``make_sfpl_epoch_sharded`` does).
+
+    ``wire_dtype`` / ``wire_dtype_bwd`` narrow the exchange payloads
+    (``core.wire``): smashed rows (and optionally the routed-back
+    gradient rows) quantize/cast right before each collective and are
+    restored right after — per-row f32 scales ride the same collective
+    as packed payload columns, so the one-``all_to_all``-per-direction
+    contract is unchanged.
     """
     axis = _resolve_axis(mesh, axis)
     names = (axis,) if isinstance(axis, str) else tuple(axis)
@@ -353,7 +379,8 @@ def sfpl_epoch_sharded(key, st, data, split: SplitModel, opt_c, opt_s, *,
                       collector_mode=collector_mode,
                       collector_pipeline=collector_pipeline,
                       collector_submesh=collector_submesh, pods=pods,
-                      participation=part_host)
+                      participation=part_host, wire_dtype=wire_dtype,
+                      wire_dtype_bwd=wire_dtype_bwd)
     placement = RD.DataMesh(mesh, axis)
     return RD.sfpl_round(
         key, st, data, split, opt_c, opt_s, num_clients=num_clients,
@@ -362,7 +389,8 @@ def sfpl_epoch_sharded(key, st, data, split: SplitModel, opt_c, opt_s, *,
             num_clients, alpha=alpha, mode=collector_mode, slack=slack,
             use_kernel=use_kernel, check_capacity=check_capacity,
             pipeline=collector_pipeline, stream_slack=stream_slack,
-            submesh=collector_submesh),
+            submesh=collector_submesh, wire_dtype=wire_dtype,
+            wire_dtype_bwd=wire_dtype_bwd),
         participation=participation)
 
 

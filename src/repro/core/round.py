@@ -70,7 +70,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.core import collector as C
 from repro.core.bn_policy import fedavg, aggregate_bn_state
 from repro.core.collector_dist import (
-    axis_tuple, balanced_stream_slack, build_route_plans,
+    _resolve_wire, axis_tuple, balanced_stream_slack, build_route_plans,
     build_submesh_route_plans, exact_pair_cap, make_grouped_balanced_perm,
     mesh_axis_size, pair_capacity, plan_exchange, plan_exchange_complete,
     plan_exchange_issue, plan_payload_bytes, plan_shuffle,
@@ -184,14 +184,16 @@ class DataMesh:
 
     def collector(self, num_clients, *, alpha=1.0, mode="balanced",
                   slack=None, use_kernel=None, check_capacity=False,
-                  pipeline="sync", stream_slack=None, submesh=None):
+                  pipeline="sync", stream_slack=None, submesh=None,
+                  wire_dtype=None, wire_dtype_bwd=None):
         if pipeline not in ("sync", "double_buffered"):
             raise ValueError(f"unknown collector pipeline {pipeline!r}: "
                              f"expected 'sync' or 'double_buffered'")
         common = dict(mesh=self.mesh, num_clients=num_clients,
                       axis=self.axis, mode=mode, alpha=alpha,
                       slack=slack, use_kernel=use_kernel,
-                      check_capacity=check_capacity)
+                      check_capacity=check_capacity,
+                      wire_dtype=wire_dtype, wire_dtype_bwd=wire_dtype_bwd)
         if pipeline == "double_buffered":
             return StreamingAllToAll(stream_slack=stream_slack,
                                      submesh=submesh, **common)
@@ -252,6 +254,11 @@ class MeshAllToAll:
     forces the slack-buffered plan shape even in balanced mode).
     ``use_kernel=None`` (auto) fuses the local bucket gathers into the
     Pallas kernels on TPU and keeps the jnp gathers elsewhere.
+    ``wire_dtype`` narrows the smashed rows' on-wire dtype
+    (``core.wire.WIRE_DTYPE_NAMES``) — quantized wires ship per-row f32
+    scales as packed extra payload columns of the same collective;
+    ``wire_dtype_bwd`` independently opts the routed-back gradient rows
+    into a narrow wire (default exact f32/compute-dtype backward).
     """
     mesh: object
     num_clients: int
@@ -261,6 +268,8 @@ class MeshAllToAll:
     slack: Optional[float] = None
     use_kernel: Optional[bool] = None
     check_capacity: bool = False
+    wire_dtype: Optional[str] = None
+    wire_dtype_bwd: Optional[str] = None
 
     pipelined = False
 
@@ -308,21 +317,31 @@ class MeshAllToAll:
         return (resolve_use_kernel(self.use_kernel)
                 and jnp.issubdtype(dtype, jnp.floating))
 
+    def _wire(self, dtype):
+        """Effective wire of a ``dtype`` payload: ``None`` when rows ship
+        as computed (no-op wires, non-float payloads like the label
+        permute), else the resolved wire name."""
+        return _resolve_wire(jnp.dtype(dtype), self.wire_dtype)
+
     def permute(self, x, prep):
         if not isinstance(prep, PreparedPerm):
             prep = self.prepare(prep, x.shape[0])
         return plan_shuffle(
             x, prep.plans, mesh=self.mesh, axis=self.axis,
-            use_kernel=self._use_k(x.dtype), check_capacity=self._check())
+            use_kernel=self._use_k(x.dtype), check_capacity=self._check(),
+            wire_dtype=self.wire_dtype, wire_dtype_bwd=self.wire_dtype_bwd)
 
     def exchange_bytes(self, prep, row_elems, dtype):
         """Wire bytes of one forward pool exchange (the activation
         ``all_to_all``) for ``row_elems``-element rows in ``dtype`` —
-        ``collector_dist.plan_payload_bytes`` of the step's forward plan.
-        Plan shapes are dtype-independent, so bf16 smashed data is exactly
-        half the f32 payload at a matched config."""
+        ``collector_dist.plan_payload_bytes`` of the step's forward plan,
+        in the strategy's EFFECTIVE wire dtype (scale sidecar included
+        for quantized wires). Plan shapes are dtype-independent, so bf16
+        smashed data is exactly half the f32 payload at a matched
+        config, and an int8 wire is a quarter plus 4 scale bytes/row."""
         return plan_payload_bytes(prep.plans[0], row_elems,
-                                  jnp.dtype(dtype).itemsize)
+                                  jnp.dtype(dtype).itemsize,
+                                  wire_dtype=self._wire(dtype))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -550,7 +569,9 @@ class StreamingAllToAll(MeshAllToAll):
                 rows, prep.plans[g],
                 mesh=self.mesh, axis=self.axis,
                 use_kernel=self._use_k(x.dtype),
-                check_capacity=self._check()))
+                check_capacity=self._check(),
+                wire_dtype=self.wire_dtype,
+                wire_dtype_bwd=self.wire_dtype_bwd))
         return self.assemble(parts, prep, n)
 
     def assemble(self, parts, prep, n):
@@ -568,21 +589,33 @@ class StreamingAllToAll(MeshAllToAll):
         return plan_exchange_issue(
             rows, prep.plans[g][0], mesh=self.mesh, axis=self.axis,
             use_kernel=self._use_k(rows.dtype),
-            check_capacity=self._check())
+            check_capacity=self._check(), wire_dtype=self.wire_dtype)
 
     def complete(self, slot):
-        """Land an in-flight buffer slot: the group's shuffled rows."""
-        recv, _ = slot
+        """Land an in-flight buffer slot: the group's shuffled rows. The
+        kernel decision reads the slot's wire context, not the received
+        buffer — under a quantized wire ``recv`` is the packed int8/fp8
+        block, but the gather lands compute-dtype rows."""
+        recv, _, ctx = slot
+        dtype = recv.dtype if ctx is None else ctx[1]
         return plan_exchange_complete(
             slot, mesh=self.mesh, axis=self.axis,
-            use_kernel=self._use_k(recv.dtype))
+            use_kernel=self._use_k(dtype))
 
-    def exchange_bytes(self, prep, row_elems, dtype):
+    def exchange_bytes(self, prep, row_elems, dtype, skip=None):
         """Wire bytes of one forward pool exchange: the sum of the
-        per-flush-group collectives' ``plan_payload_bytes``."""
+        per-flush-group collectives' ``plan_payload_bytes`` in the
+        strategy's effective wire dtype. ``skip`` (per-group bools —
+        elastic participation) excludes groups whose exchange is
+        statically skipped: a fully dropped flush group's rows pass
+        through unexchanged, so no collective runs and no bytes cross
+        the wire for it."""
         itemsize = jnp.dtype(dtype).itemsize
-        return sum(plan_payload_bytes(plans[0], row_elems, itemsize)
-                   for plans in prep.plans)
+        wire = self._wire(dtype)
+        return sum(plan_payload_bytes(plans[0], row_elems, itemsize,
+                                      wire_dtype=wire)
+                   for g, plans in enumerate(prep.plans)
+                   if not (skip and skip[g]))
 
     def route_back(self, g_shuf, prep, n, skip=None):
         """Algorithm 1's de-shuffle, explicit: the per-group exchange with
@@ -603,7 +636,8 @@ class StreamingAllToAll(MeshAllToAll):
                 continue
             parts.append(plan_exchange(
                 rows, prep.plans[g][1], mesh=self.mesh, axis=self.axis,
-                use_kernel=self._use_k(g_shuf.dtype)))
+                use_kernel=self._use_k(g_shuf.dtype),
+                wire_dtype=self.wire_dtype_bwd))
         return self.assemble(parts, prep, n)
 
 

@@ -1,0 +1,142 @@
+"""Wire formats for the smashed-data exchange.
+
+The collector's hot cost on constrained links is wire bytes, not FLOPs:
+the ``wire_dtype`` axis lets the smashed rows (and, behind the separate
+``wire_dtype_bwd`` knob, the routed-back gradient rows) cross each
+collective in a narrower dtype than they are computed in, independently
+of the f32 master-param training contract.
+
+Supported wire dtypes:
+
+  * ``"float32"``  — the identity wire (ship as computed);
+  * ``"bfloat16"`` — cast-only, half the f32 bytes, no sidecar;
+  * ``"int8"``     — per-row symmetric amax quantization (qmax 127);
+  * ``"float8_e4m3"`` — per-row amax scaling into the e4m3 grid
+    (qmax 448).
+
+Quantized wires carry one f32 scale PER ROW. The scale never travels as
+a second collective: :func:`pack_scales` bitcasts it into
+``SCALE_LANES`` one-byte lanes appended as extra feature columns of the
+single payload operand, so the exchange stays one ``all_to_all`` per
+direction with the operand in the wire dtype (``SCALE_BYTES`` extra
+bytes per row — exact accounting in
+``collector_dist.plan_payload_bytes``). A zero payload row (the slack
+pad row) unpacks to scale ``0.0`` and dequantizes to exact zeros.
+
+Quantization is per-row symmetric: ``scale = amax / qmax`` with the
+``amax == 0`` row mapped to scale 0 (all-zero rows survive the round
+trip exactly). Dequantized values satisfy
+``|x - dq(q(x))| <= amax / qmax / 2`` for int8 (round-to-nearest on a
+127-step grid) and the e4m3 relative error for fp8.
+
+>>> import jax.numpy as jnp
+>>> x = jnp.array([[1.0, -2.0, 0.5], [0.0, 0.0, 0.0]])
+>>> q, s = quantize_rows(x, "int8")
+>>> (q.dtype.name, s.dtype.name, s.shape)
+('int8', 'float32', (2,))
+>>> (int(q[0, 1]), float(s[1]))
+(-127, 0.0)
+>>> y = dequantize_rows(q, s, jnp.float32)
+>>> bool(jnp.all(y[1] == 0)), bool(jnp.max(jnp.abs(y - x)) < 0.01)
+(True, True)
+>>> lanes = pack_scales(s, "int8")
+>>> (lanes.shape, lanes.dtype.name)
+((2, 4), 'int8')
+>>> bool(jnp.all(unpack_scales(lanes) == s))
+True
+>>> is_quantized("bfloat16"), is_quantized("float8_e4m3")
+(False, True)
+>>> resolve_wire_dtype(None), resolve_wire_dtype("float32")
+(None, None)
+>>> resolve_wire_dtype("fp4")
+Traceback (most recent call last):
+    ...
+ValueError: unknown wire_dtype 'fp4': expected one of ('float32', \
+'bfloat16', 'int8', 'float8_e4m3')
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+WIRE_DTYPES = {
+    "float32": jnp.float32,
+    "bfloat16": jnp.bfloat16,
+    "int8": jnp.int8,
+    "float8_e4m3": jnp.float8_e4m3fn,
+}
+
+WIRE_DTYPE_NAMES = tuple(WIRE_DTYPES)
+
+# largest exactly-representable magnitude of each quantized wire grid
+QMAX = {"int8": 127.0, "float8_e4m3": 448.0}
+
+# one f32 row scale bitcast into this many one-byte wire lanes
+SCALE_LANES = 4
+SCALE_BYTES = 4
+
+
+def resolve_wire_dtype(name):
+    """Canonical wire-dtype name, or ``None`` for the identity wire
+    (``None``/``"float32"`` — ship rows as computed). Unknown names raise
+    eagerly with the supported set, so launcher typos fail before any
+    device work."""
+    if name is None or name == "float32":
+        return None
+    if name not in WIRE_DTYPES:
+        raise ValueError(f"unknown wire_dtype {name!r}: expected one of "
+                         f"{WIRE_DTYPE_NAMES}")
+    return name
+
+
+def is_quantized(name):
+    """True for wire dtypes that need per-row scales (int8 / fp8); the
+    bf16 wire is a plain cast."""
+    return name in QMAX
+
+
+def wire_itemsize(name):
+    """Bytes per element on the wire (1 for int8/fp8, 2 for bf16)."""
+    return jnp.dtype(WIRE_DTYPES[name]).itemsize
+
+
+def quantize_rows(x, wire_dtype):
+    """Per-row symmetric quantization of ``(R, D)`` float rows into the
+    ``wire_dtype`` grid. Returns ``(q, scales)``: ``q`` of the wire dtype
+    and f32 ``scales`` of shape ``(R,)`` with ``x ~= q * scales[:, None]``.
+    All-zero rows get scale 0 and quantize to exact zeros. This is the
+    jnp reference semantics the fused ``kernels/quant_permute`` Pallas
+    kernels reproduce bit-for-bit."""
+    qmax = QMAX[wire_dtype]
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=1)
+    # multiply by the f32 reciprocal (not divide): bit-identical to the
+    # Pallas kernels' scale computation under XLA's constant rewrites
+    scale = amax * jnp.float32(1.0 / qmax)
+    inv = jnp.where(amax > 0, qmax / jnp.where(amax > 0, amax, 1.0), 0.0)
+    y = xf * inv[:, None]
+    if jnp.issubdtype(WIRE_DTYPES[wire_dtype], jnp.integer):
+        y = jnp.round(y)
+    return y.astype(WIRE_DTYPES[wire_dtype]), scale
+
+
+def dequantize_rows(q, scales, out_dtype):
+    """Inverse of :func:`quantize_rows`: ``(R, D)`` wire rows times their
+    per-row f32 scales, cast to ``out_dtype``."""
+    return (q.astype(jnp.float32) * scales[:, None]).astype(out_dtype)
+
+
+def pack_scales(scales, wire_dtype):
+    """Bitcast ``(R,)`` f32 scales into ``(R, SCALE_LANES)`` one-byte
+    lanes of the (quantized) wire dtype, ready to concatenate as extra
+    payload columns — rows and scales cross the collective as ONE operand
+    in the wire dtype."""
+    lanes = jax.lax.bitcast_convert_type(scales, jnp.uint8)
+    return jax.lax.bitcast_convert_type(lanes, WIRE_DTYPES[wire_dtype])
+
+
+def unpack_scales(lanes):
+    """Inverse of :func:`pack_scales`: ``(R, SCALE_LANES)`` one-byte wire
+    lanes back to ``(R,)`` f32 scales."""
+    u8 = jax.lax.bitcast_convert_type(lanes, jnp.uint8)
+    return jax.lax.bitcast_convert_type(u8, jnp.float32)

@@ -1,0 +1,1 @@
+from repro.kernels.quant_permute import ops, ref

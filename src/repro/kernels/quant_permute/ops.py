@@ -1,0 +1,83 @@
+"""jit'd wrappers for the fused quantize-permute collector kernels.
+
+The wrappers speak the exchange's FLATTENED layout: the collector packs
+quantized rows and bitcast scale lanes into one 2-D wire payload for the
+``all_to_all``, so both ops take/return ``(rows, features)`` arrays
+(``quant_bucket_permute`` flattens nd inputs itself) and the caller
+reshapes the dequantized slab back to the smashed feature shape.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.wire import QMAX, WIRE_DTYPES
+from repro.kernels.collector_permute.ops import _flatten_features
+from repro.kernels.quant_permute.kernel import (
+    dequant_unbucket_permute_2d, quant_bucket_permute_2d)
+
+
+@functools.partial(jax.jit, static_argnames=("wire_dtype", "interpret"))
+def quant_bucket_permute(x, idx, *, wire_dtype, interpret=False):
+    """Fused send-side quantize + bucket gather: x (R, ...) local float
+    rows, idx (S, cap) two-level (destination shard, slot) -> source row
+    map. Returns ``(q, scales)``: q (S*cap, d) in the wire dtype with
+    the feature dims flattened, f32 scales (S*cap,), both in send-bucket
+    order — ``q[s*cap + r], scales[s*cap + r]`` quantize ``x[idx[s, r]]``."""
+    x2, d, _, _, _ = _flatten_features(x)
+    q, s = quant_bucket_permute_2d(
+        x2, idx, WIRE_DTYPES[wire_dtype], QMAX[wire_dtype],
+        interpret=interpret)
+    return q[:, :d], s[:, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("out_dtype", "interpret"))
+def dequant_unbucket_permute(q, scales, idx, *, out_dtype,
+                             interpret=False):
+    """Fused receive-side unbucket gather + dequantize: q (R, d) flat
+    received wire rows, scales (R,) f32, idx (B,) output row -> flat
+    slot. Returns the (B, d) dequantized shuffled slab in ``out_dtype``
+    (caller reshapes to the smashed feature shape)."""
+    q2, d, _, _, _ = _flatten_features(q)
+    out = dequant_unbucket_permute_2d(
+        q2, scales.reshape(-1, 1), idx, jnp.dtype(out_dtype),
+        interpret=interpret)
+    return out[:, :d]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def quant_dequant_roundtrip_ad(x, send_idx, recv_idx, wire_dtype,
+                               interpret=False):
+    """Differentiable fused round trip: ``quant_bucket_permute`` then
+    ``dequant_unbucket_permute`` (what one quantized exchange applies to
+    the rows, minus the collective). The VJP is STRAIGHT-THROUGH:
+    dequantize-of-quantize is treated as the identity, so gradients route
+    purely by the composed gather — exactly the convention
+    ``plan_shuffle``'s backward exchange implements (the backward plan
+    moves cotangents of the DEQUANTIZED values; the quantization error is
+    not differentiated). Exists for direct AD through the kernel pair
+    (tests, ad-hoc pipelines); the round engine routes gradients by the
+    precomputed inverse plan."""
+    q, s = quant_bucket_permute(x, send_idx, wire_dtype=wire_dtype,
+                                interpret=interpret)
+    out = dequant_unbucket_permute(q, s, recv_idx, out_dtype=x.dtype,
+                                   interpret=interpret)
+    return out.reshape((recv_idx.shape[0],) + x.shape[1:])
+
+
+def _roundtrip_fwd(x, send_idx, recv_idx, wire_dtype, interpret):
+    out = quant_dequant_roundtrip_ad(x, send_idx, recv_idx, wire_dtype,
+                                     interpret)
+    return out, (send_idx, recv_idx, x.shape)
+
+
+def _roundtrip_bwd(wire_dtype, interpret, res, g):
+    send_idx, recv_idx, shape = res
+    src = send_idx.reshape(-1)[recv_idx]     # out[i] <- x[src[i]]
+    gx = jnp.zeros(shape, g.dtype)
+    return gx.at[src].add(g), None, None
+
+
+quant_dequant_roundtrip_ad.defvjp(_roundtrip_fwd, _roundtrip_bwd)

@@ -1,0 +1,24 @@
+"""Pure-jnp oracles for the fused quantize-permute collector gathers.
+
+Quantization semantics live in ``core.wire`` (per-row symmetric amax
+scaling); these oracles compose them with the plain gather refs so the
+Pallas kernels have an exact bit-for-bit comparison target — and so the
+collector's non-kernel path shares one implementation with the tests.
+"""
+from __future__ import annotations
+
+from repro.core import wire as W
+
+
+def quant_bucket_permute_ref(x, idx, wire_dtype):
+    """x: (R, d) float rows; idx: (S, cap) or flat (S*cap,). Returns
+    ``(q, scales)`` with ``q[k] = quantize(x[idx.flat[k]])`` in the wire
+    dtype and f32 scales (S*cap,) in the same bucketed order."""
+    return W.quantize_rows(x[idx.reshape(-1)], wire_dtype)
+
+
+def dequant_unbucket_permute_ref(q, scales, idx, out_dtype):
+    """q: (R, d) flat received wire rows with (R,) f32 scales; idx: (B,).
+    Returns the dequantized shuffled slab ``q[idx] * scales[idx]`` in
+    ``out_dtype``."""
+    return W.dequantize_rows(q[idx], scales[idx], out_dtype)

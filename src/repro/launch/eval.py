@@ -63,7 +63,8 @@ def evaluate_lm(spec, cfg, params, *, batches=8, batch=8, seq=64, seed=0):
 def evaluate_paper(*, num_clients=8, epochs=4, batch_size=8, sharded=False,
                    alpha=1.0, pipeline="sync", submesh=None, pods=None,
                    use_kernel=None, depth=8, width=8, hw=8, lr=0.05,
-                   compute_dtype="float32", seed=0):
+                   compute_dtype="float32", wire_dtype=None,
+                   wire_dtype_bwd=None, seed=0):
     """Train SFPL and SFLv2 through the unified round engine on the same
     data, fleet size, and placement; return accuracy under BOTH test
     protocols (IID and non-IID batches) per scheme, so the head-to-head
@@ -71,7 +72,11 @@ def evaluate_paper(*, num_clients=8, epochs=4, batch_size=8, sharded=False,
     is evaluated with the BN treatment it trained with (SFPL: CMSD,
     batch statistics; SFLv2: RMSD, aggregated running statistics).
     ``compute_dtype="bfloat16"`` runs both schemes on the mixed-precision
-    ``ComputePolicy`` path (f32 master params and BN statistics)."""
+    ``ComputePolicy`` path (f32 master params and BN statistics);
+    ``wire_dtype`` / ``wire_dtype_bwd`` narrow the sharded SFPL
+    exchange's on-wire dtype (``core.wire`` — SFLv2 has no collector
+    exchange, so the knob only affects the SFPL side of the
+    comparison)."""
     from repro.core import engine as E
     from repro.core.evaluate import evaluate_split_iid, evaluate_split_noniid
     from repro.data import make_synthetic_cifar, partition_positive_labels
@@ -86,7 +91,7 @@ def evaluate_paper(*, num_clients=8, epochs=4, batch_size=8, sharded=False,
         test_per_class=2 * batch_size, hw=hw)
     data = partition_positive_labels(tx, ty, num_clients)
     split = E.make_resnet_split(cfg, policy=make_compute_policy(
-        compute_dtype, use_kernel))
+        compute_dtype, use_kernel, wire_dtype, wire_dtype_bwd))
     opt = sgd_momentum(lr, momentum=0.9, weight_decay=5e-4)
 
     def run(scheme):
@@ -107,7 +112,8 @@ def evaluate_paper(*, num_clients=8, epochs=4, batch_size=8, sharded=False,
                     mesh=mesh, num_clients=num_clients,
                     batch_size=batch_size, alpha=alpha,
                     collector_pipeline=pipeline,
-                    collector_submesh=submesh, use_kernel=use_kernel)
+                    collector_submesh=submesh, use_kernel=use_kernel,
+                    wire_dtype=wire_dtype, wire_dtype_bwd=wire_dtype_bwd)
             else:
                 epoch = ED.make_sflv2_epoch_sharded(
                     split, opt, opt, data, mesh=mesh,
@@ -172,13 +178,33 @@ def main():
                     default="float32", choices=("float32", "bfloat16"),
                     help="paper mode: split-model compute dtype (bfloat16 "
                          "= mixed precision with f32 master params)")
+    from repro.core.wire import WIRE_DTYPE_NAMES
+    ap.add_argument("--wire-dtype", dest="wire_dtype", default=None,
+                    choices=WIRE_DTYPE_NAMES,
+                    help="sharded SFPL: on-wire dtype of the smashed-data "
+                         "exchange (int8/float8_e4m3 quantize per row; "
+                         "default: ship rows as computed)")
+    ap.add_argument("--wire-dtype-bwd", dest="wire_dtype_bwd", default=None,
+                    choices=WIRE_DTYPE_NAMES,
+                    help="sharded SFPL: wire dtype of the routed-back "
+                         "gradient rows (default: exact)")
+    ap.add_argument("--compilation-cache-dir", dest="compilation_cache_dir",
+                    default=None,
+                    help="persist XLA compilations to this directory "
+                         "(jax_compilation_cache_dir) so repeat launches "
+                         "skip recompiles")
     args = ap.parse_args()
+    if args.compilation_cache_dir:
+        jax.config.update("jax_compilation_cache_dir",
+                          args.compilation_cache_dir)
     if args.paper:
         rep = evaluate_paper(num_clients=args.clients, epochs=args.epochs,
                              sharded=args.sharded, alpha=args.alpha,
                              pipeline=args.pipeline, submesh=args.submesh,
                              pods=args.pods, use_kernel=args.use_kernel,
-                             compute_dtype=args.compute_dtype)
+                             compute_dtype=args.compute_dtype,
+                             wire_dtype=args.wire_dtype,
+                             wire_dtype_bwd=args.wire_dtype_bwd)
         chance = 100.0 / args.clients
         print(f"matched fleet ({args.clients} clients, "
               f"sharded={args.sharded}, chance {chance:.1f}%):")

@@ -28,7 +28,7 @@ Usage:
   PYTHONPATH=src python -m repro.launch.train --paper --sharded \
       --clients 8 --epochs 4 [--scheme sflv2] [--alpha 0.5] \
       [--collector uniform] [--pipeline double_buffered] [--submesh] \
-      [--use-kernel] \
+      [--use-kernel] [--wire-dtype int8] [--compilation-cache-dir .xla] \
       [--ckpt state.npz --ckpt-every 1] [--resume state.npz] \
       [--drop-rate 0.2 --straggler-rate 0.1 --straggler-timeout 0.5]
 """
@@ -89,24 +89,34 @@ def train_lm(arch_id, *, steps=50, batch=8, seq=64, smoke=True, sfpl=False,
     return losses
 
 
-def make_compute_policy(compute_dtype, use_kernel=None):
-    """``ComputePolicy`` for the launchers' ``--compute-dtype`` knob, or
-    ``None`` at the f32 default (which keeps the original unfused graph
-    bit-for-bit — the parity baseline). Off-TPU the fused kernels run in
-    interpret mode when forced on."""
-    if compute_dtype is None or compute_dtype == "float32":
+def make_compute_policy(compute_dtype, use_kernel=None, wire_dtype=None,
+                        wire_dtype_bwd=None):
+    """``ComputePolicy`` for the launchers' ``--compute-dtype`` /
+    ``--wire-dtype`` knobs, or ``None`` at the all-default configuration
+    (f32 compute, identity wire — which keeps the original unfused graph
+    bit-for-bit, the parity baseline). A narrow wire at f32 compute is a
+    valid policy on its own: the model computes in f32 and only the
+    exchange payload narrows. Off-TPU the fused kernels run in interpret
+    mode when forced on."""
+    from repro.core.wire import resolve_wire_dtype
+    wire = resolve_wire_dtype(wire_dtype)
+    wire_bwd = resolve_wire_dtype(wire_dtype_bwd)
+    mixed = compute_dtype is not None and compute_dtype != "float32"
+    if not mixed and wire is None and wire_bwd is None:
         return None
     from repro.models.common import ComputePolicy
-    return ComputePolicy(compute_dtype=compute_dtype,
+    return ComputePolicy(compute_dtype=compute_dtype or "float32",
                          use_fused_kernels=use_kernel,
-                         kernel_interpret=jax.default_backend() != "tpu")
+                         kernel_interpret=jax.default_backend() != "tpu",
+                         wire_dtype=wire, wire_dtype_bwd=wire_bwd)
 
 
 def train_paper(*, num_clients=8, epochs=4, batch_size=8, sharded=False,
                 use_kernel=None, depth=8, width=8, hw=8, lr=0.05,
                 scheme="sfpl", alpha=1.0, collector="balanced",
                 pipeline="sync", submesh=None, pods=None,
-                compute_dtype="float32", log_every=1,
+                compute_dtype="float32", wire_dtype=None,
+                wire_dtype_bwd=None, log_every=1,
                 ckpt=None, ckpt_every=0, resume=None,
                 straggler_timeout=None, drop_rate=0.0, straggler_rate=0.0,
                 straggler_delay=1.0, fault_seed=0):
@@ -119,7 +129,10 @@ def train_paper(*, num_clients=8, epochs=4, batch_size=8, sharded=False,
     ``compute_dtype="bfloat16"`` switches the split model onto the
     mixed-precision ``ComputePolicy`` path: f32 master params and BN
     stats, bf16 compute and smashed-data exchange, fused Pallas epilogues
-    on TPU. ``pods`` splits the sharded SFPL mesh into the 2-D
+    on TPU. ``wire_dtype`` (sharded SFPL) narrows the exchange payload
+    independently of the compute dtype — int8/fp8 wires quantize per row
+    right before each collective (``core.wire``); ``wire_dtype_bwd``
+    does the same for the routed-back gradient rows. ``pods`` splits the sharded SFPL mesh into the 2-D
     ``("pod", "data")`` multi-host topology (one pod per host process
     under ``launch.multihost.initialize``; also works single-process for
     schedule parity testing).
@@ -160,7 +173,7 @@ def train_paper(*, num_clients=8, epochs=4, batch_size=8, sharded=False,
         test_per_class=2 * batch_size, hw=hw)
     data = partition_positive_labels(tx, ty, num_clients)
     split = E.make_resnet_split(cfg, policy=make_compute_policy(
-        compute_dtype, use_kernel))
+        compute_dtype, use_kernel, wire_dtype, wire_dtype_bwd))
     opt = sgd_momentum(lr, momentum=0.9, weight_decay=5e-4)
     st = E.init_dcml_state(key, lambda k: R.init(k, cfg), num_clients,
                            opt, opt)
@@ -186,12 +199,15 @@ def train_paper(*, num_clients=8, epochs=4, batch_size=8, sharded=False,
             shards = ED.fit_shards(num_clients, batch_size, alpha=alpha,
                                    collector_mode=collector,
                                    collector_pipeline=pipeline,
-                                   collector_submesh=submesh, pods=pods)
+                                   collector_submesh=submesh, pods=pods,
+                                   wire_dtype=wire_dtype,
+                                   wire_dtype_bwd=wire_dtype_bwd)
             mesh = ED.make_data_mesh(shards, pods=pods)
             print(f"sharded SFPL: {shards}-way data mesh over {n_dev} "
                   f"device(s), collector={collector}, alpha={alpha}, "
                   f"pipeline={pipeline}, submesh={submesh}, pods={pods}, "
-                  f"use_kernel={use_kernel}, compute_dtype={compute_dtype}")
+                  f"use_kernel={use_kernel}, compute_dtype={compute_dtype}, "
+                  f"wire_dtype={wire_dtype}, wire_dtype_bwd={wire_dtype_bwd}")
             data_dev = ED.shard_client_data(data, mesh)
             st = ED.shard_dcml_state(st, mesh)
             epoch = ED.make_sfpl_epoch_sharded(
@@ -199,7 +215,8 @@ def train_paper(*, num_clients=8, epochs=4, batch_size=8, sharded=False,
                 num_clients=num_clients, batch_size=batch_size,
                 use_kernel=use_kernel, alpha=alpha,
                 collector_mode=collector, collector_pipeline=pipeline,
-                collector_submesh=submesh)
+                collector_submesh=submesh, wire_dtype=wire_dtype,
+                wire_dtype_bwd=wire_dtype_bwd)
     elif scheme == "sflv2":
         epoch = jax.jit(lambda k, s: E.sflv2_epoch(
             k, s, data, split, opt, opt, num_clients=num_clients,
@@ -310,6 +327,24 @@ def main():
                          "keeps f32 master params/BN stats/loss but runs "
                          "convs, BN+ReLU epilogues, and the smashed-data "
                          "exchange in bf16 (half the collector payload)")
+    from repro.core.wire import WIRE_DTYPE_NAMES
+    ap.add_argument("--wire-dtype", dest="wire_dtype", default=None,
+                    choices=WIRE_DTYPE_NAMES,
+                    help="sharded SFPL: on-wire dtype of the smashed-data "
+                         "exchange, independent of --compute-dtype — "
+                         "int8/float8_e4m3 quantize per row (f32 scales "
+                         "ride the same collective); default: ship rows "
+                         "as computed")
+    ap.add_argument("--wire-dtype-bwd", dest="wire_dtype_bwd", default=None,
+                    choices=WIRE_DTYPE_NAMES,
+                    help="sharded SFPL: wire dtype of the routed-back "
+                         "gradient rows (default: exact — the backward "
+                         "leg is the more quantization-sensitive one)")
+    ap.add_argument("--compilation-cache-dir", dest="compilation_cache_dir",
+                    default=None,
+                    help="persist XLA compilations to this directory "
+                         "(jax_compilation_cache_dir) so repeat launches "
+                         "skip recompiles")
     ap.add_argument("--clients", type=int, default=8)
     ap.add_argument("--epochs", type=int, default=4)
     ap.add_argument("--ckpt-every", dest="ckpt_every", type=int, default=0,
@@ -340,6 +375,9 @@ def main():
                     help="FaultPlan seed — the whole fault schedule is a "
                          "pure function of (seed, epoch)")
     args = ap.parse_args()
+    if args.compilation_cache_dir:
+        jax.config.update("jax_compilation_cache_dir",
+                          args.compilation_cache_dir)
     if args.paper:
         losses = train_paper(num_clients=args.clients, epochs=args.epochs,
                              batch_size=args.batch, sharded=args.sharded,
@@ -349,6 +387,8 @@ def main():
                              pipeline=args.pipeline, submesh=args.submesh,
                              pods=args.pods,
                              compute_dtype=args.compute_dtype,
+                             wire_dtype=args.wire_dtype,
+                             wire_dtype_bwd=args.wire_dtype_bwd,
                              lr=args.lr if args.lr is not None else 0.05,
                              ckpt=args.ckpt, ckpt_every=args.ckpt_every,
                              resume=args.resume,

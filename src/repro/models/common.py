@@ -31,6 +31,15 @@ class ComputePolicy:
     exchange also travels the collector's ``all_to_all`` in that dtype —
     half the payload bytes for bf16.
 
+    ``wire_dtype`` narrows the exchange payload INDEPENDENTLY of the
+    compute dtype (``core.wire.WIRE_DTYPE_NAMES``): the smashed rows are
+    quantized/cast immediately before each collective and restored to the
+    compute dtype immediately after, so f32 compute with an int8 wire is
+    a valid (and the paper-relevant constrained-uplink) configuration.
+    ``wire_dtype_bwd`` does the same for the routed-back gradient rows —
+    separate because the backward leg is usually the more
+    quantization-sensitive one (default ``None`` = exact).
+
     ``use_fused_kernels`` follows the repo-wide ``None`` = auto-on-TPU
     convention and gates the fused Pallas ``bn_act`` / ``softmax_xent``
     epilogues; ``kernel_interpret`` forces Pallas interpret mode so the
@@ -39,6 +48,8 @@ class ComputePolicy:
     compute_dtype: str = "float32"
     use_fused_kernels: Optional[bool] = None
     kernel_interpret: bool = False
+    wire_dtype: Optional[str] = None
+    wire_dtype_bwd: Optional[str] = None
 
     def cdtype(self):
         return jnp.dtype(self.compute_dtype)

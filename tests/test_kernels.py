@@ -378,3 +378,118 @@ def test_softmax_xent_grads_fuzz(rows, v, ignore_some, dtype):
     np.testing.assert_allclose(np.asarray(gk, np.float32),
                                np.asarray(gr, np.float32),
                                rtol=tol, atol=tol)
+
+
+# --------------------------------------------------------------------------
+# fused quantize-permute wire kernels: value parity is BIT-EXACT vs the
+# core.wire reference (both compute the scale as amax * (1/qmax), so XLA's
+# constant rewrites cannot split them), grads are straight-through
+
+from repro.core import wire as W
+from repro.kernels.quant_permute.ops import (
+    dequant_unbucket_permute, quant_bucket_permute,
+    quant_dequant_roundtrip_ad)
+from repro.kernels.quant_permute.ref import (dequant_unbucket_permute_ref,
+                                             quant_bucket_permute_ref)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    sc=st.sampled_from([(2, 3), (4, 4), (8, 2), (3, 7)]),
+    feat=st.sampled_from([16, 100, 512, 513]),
+    perm=st.booleans(),
+    wire=st.sampled_from(["int8", "float8_e4m3"]),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+)
+def test_quant_bucket_permute_fuzz_matches_ref(sc, feat, perm, wire, dtype):
+    """Fused quantize + send gather vs quantize_rows∘gather: quantized
+    rows AND f32 scales must match bit-for-bit (the exchange's receive
+    side dequantizes with whichever one traveled)."""
+    S, cap = sc
+    rows = S * cap
+    key = jax.random.PRNGKey(S * 101 + cap * 13 + feat)
+    x = (jax.random.normal(key, (rows, feat)) * 3).astype(dtype)
+    k2 = jax.random.fold_in(key, 1)
+    flat = (jax.random.permutation(k2, rows) if perm
+            else jax.random.randint(k2, (rows,), 0, rows))
+    idx = flat.reshape(S, cap).astype(jnp.int32)
+    q, s = quant_bucket_permute(x, idx, wire_dtype=wire, interpret=True)
+    qr, sr = quant_bucket_permute_ref(x, idx, wire)
+    assert q.dtype == W.WIRE_DTYPES[wire] and q.shape == (rows, feat)
+    assert s.dtype == jnp.float32 and s.shape == (rows,)
+    np.testing.assert_array_equal(np.asarray(q).view(np.uint8),
+                                  np.asarray(qr).view(np.uint8))
+    np.testing.assert_array_equal(np.asarray(s), np.asarray(sr))
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    rows=st.integers(2, 40),
+    b=st.sampled_from([1, 5, 16, 33]),
+    feat=st.sampled_from([16, 100, 513]),
+    wire=st.sampled_from(["int8", "float8_e4m3"]),
+    out_dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+)
+def test_dequant_unbucket_permute_fuzz_matches_ref(rows, b, feat, wire,
+                                                   out_dtype):
+    """Fused receive gather + dequantize vs gather∘dequantize_rows,
+    including B != R (sub-mesh slabs) and index repeats (slack pad)."""
+    key = jax.random.PRNGKey(rows * 11 + b + feat)
+    x = jax.random.normal(key, (rows, feat)) * 2
+    q, s = W.quantize_rows(x, wire)
+    idx = jax.random.randint(jax.random.fold_in(key, 1), (b,), 0, rows)
+    out = dequant_unbucket_permute(q, s, idx, out_dtype=out_dtype,
+                                   interpret=True)
+    ref = dequant_unbucket_permute_ref(q, s, idx, out_dtype)
+    assert out.dtype == out_dtype and out.shape == (b, feat)
+    np.testing.assert_array_equal(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32))
+
+
+@pytest.mark.parametrize("wire,tol", [("int8", 2e-2), ("float8_e4m3", 2e-1)])
+def test_quant_roundtrip_error_bound_and_zero_rows(wire, tol):
+    """dequant(quant(x)) stays inside the wire grid's per-row error bound
+    (relative to the row amax) and all-zero rows — the slack pad row's
+    payload — survive exactly."""
+    key = jax.random.PRNGKey(4)
+    x = jax.random.normal(key, (12, 64), jnp.float32) * 5
+    x = x.at[3].set(0.0)
+    idx = jnp.arange(12, dtype=jnp.int32).reshape(4, 3)
+    q, s = quant_bucket_permute(x, idx, wire_dtype=wire, interpret=True)
+    out = dequant_unbucket_permute(q, s, jnp.arange(12, dtype=jnp.int32),
+                                   out_dtype=jnp.float32, interpret=True)
+    amax = np.abs(np.asarray(x)).max(axis=1, keepdims=True)
+    err = np.abs(np.asarray(out) - np.asarray(x))
+    assert np.all(err <= tol * np.maximum(amax, 1e-30))
+    np.testing.assert_array_equal(np.asarray(out[3]), np.zeros(64))
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    sc=st.sampled_from([(2, 4), (4, 3), (8, 2)]),
+    feat=st.sampled_from([16, 129]),
+    perm=st.booleans(),
+    wire=st.sampled_from(["int8", "float8_e4m3"]),
+)
+def test_quant_roundtrip_grads_are_straight_through(sc, feat, perm, wire):
+    """AD through the fused quantized round trip vs the UNQUANTIZED gather
+    oracle: dequantize∘quantize is treated as identity, so the cotangent
+    routes purely by the composed gather and scatter-ADDS on repeats —
+    the convention plan_shuffle's backward exchange implements."""
+    S, cap = sc
+    rows = S * cap
+    key = jax.random.PRNGKey(S * 43 + feat)
+    x = jax.random.normal(key, (rows, feat), jnp.float32)
+    w = jax.random.normal(jax.random.fold_in(key, 2), (rows, feat))
+    k2 = jax.random.fold_in(key, 1)
+    flat = (jax.random.permutation(k2, rows) if perm
+            else jax.random.randint(k2, (rows,), 0, rows))
+    send_idx = flat.reshape(S, cap).astype(jnp.int32)
+    recv_idx = jax.random.permutation(jax.random.fold_in(key, 3), rows)
+    gk = jax.grad(lambda x: jnp.sum(quant_dequant_roundtrip_ad(
+        x, send_idx, recv_idx, wire, True) * w))(x)
+    src = flat[recv_idx]
+    gr = jax.grad(
+        lambda x: jnp.sum(x[src] * w))(x)
+    np.testing.assert_allclose(np.asarray(gk), np.asarray(gr),
+                               rtol=1e-6, atol=1e-6)

@@ -374,3 +374,145 @@ def test_uniform_auto_slack_probing_is_cached():
     # distinct keys still probe
     uniform_auto_slack(96, 4)
     assert _uniform_auto_slack_cached.cache_info().misses == 2
+
+
+def test_plan_payload_bytes_golden_across_wire_dtypes():
+    """Golden wire-byte accounting at the bench cut width (D=512) for all
+    three plan families. The numbers are EXACT: 64 exchanged rows cost
+    64*512*4 f32 bytes, half that at bf16, and 64*(512+4) at a quantized
+    wire (one byte per element plus the 4 bitcast f32-scale lanes packed
+    into the payload) — below bf16 and ~0.252x of f32, inside the 0.3x
+    budget the quantized exchange is sized against."""
+    from repro.core.collector_dist import (build_route_plans,
+                                           build_submesh_route_plans,
+                                           exact_pair_cap,
+                                           make_balanced_perm,
+                                           plan_payload_bytes)
+    from repro.core.round import StreamingAllToAll
+    n, s, d = 64, 8, 512
+    perm = make_balanced_perm(jax.random.PRNGKey(0), n, s)
+    whole, _ = build_route_plans(perm, s, cap=exact_pair_cap(n, s),
+                                 may_drop=False)
+    sub = make_balanced_perm(jax.random.PRNGKey(1), 16, 2)
+    submesh, _ = build_submesh_route_plans(sub, 3, s, 2)
+
+    class _FakeMesh:
+        axis_names = ("data",)
+        devices = np.empty((8,), dtype=object)
+
+    coll = StreamingAllToAll(mesh=_FakeMesh(), num_clients=8, alpha=0.5)
+    prep = coll.prepare(coll.make_perm(jax.random.PRNGKey(0), n), n)
+    grouped = [p for p, _ in prep.plans]
+
+    # every plan family exchanges 64 (padded) rows at this layout, so the
+    # golden bytes coincide; what the test pins is the per-dtype row cost
+    golden = {None: 131072, "float32": 131072, "bfloat16": 65536,
+              "int8": 33024, "float8_e4m3": 33024}
+    for plan in [whole, submesh] + grouped:
+        for wire, want in golden.items():
+            got = plan_payload_bytes(plan, d, 4, wire_dtype=wire)
+            assert got == want, (wire, got, want)
+    b32 = golden["float32"]
+    assert golden["int8"] < golden["bfloat16"]          # beats bf16
+    assert golden["int8"] <= 0.3 * b32                  # 0.252x of f32
+    assert golden["int8"] == 64 * (d + 4)               # rows + scale lanes
+    # per-row accounting scales with the feature width, not the plan
+    assert plan_payload_bytes(whole, 16, 4, wire_dtype="int8") == 64 * 20
+
+
+def test_quantized_exchange_is_one_collective_in_wire_dtype():
+    """Jaxpr proof for the quantized path: the int8-wire exchange still
+    lowers to exactly ONE all_to_all forward (TWO for forward+backward
+    when the backward leg is also quantized), zero sorts, and the
+    payload operand itself is in the wire dtype with the packed scale
+    lanes as trailing columns — ``i8[S, cap, d+4]``."""
+    import re
+
+    from repro.core.collector_dist import (build_route_plans,
+                                           exact_pair_cap, plan_shuffle)
+    mesh = jax.make_mesh((1,), ("data",))
+    n, d = 16, 3
+    x = jnp.zeros((n, d))
+    perm = jax.random.permutation(jax.random.PRNGKey(0), n)
+    plans = build_route_plans(perm, 1, cap=exact_pair_cap(n, 1),
+                              may_drop=False)
+
+    fwd_jaxpr = str(jax.make_jaxpr(lambda v, pl: plan_shuffle(
+        v, pl, mesh=mesh, wire_dtype="int8"))(x, plans))
+    assert fwd_jaxpr.count("all_to_all") == 1, fwd_jaxpr
+    assert fwd_jaxpr.count("sort[") == 0, fwd_jaxpr
+    ops = re.findall(r"(\w+)\[([\d,]+)\] = all_to_all", fwd_jaxpr)
+    assert ops == [("i8", f"1,{n},{d + 4}")], ops
+
+    # quantized fwd + quantized bwd: both payloads in the wire dtype
+    grad_jaxpr = str(jax.make_jaxpr(lambda v, pl: jax.grad(
+        lambda u: plan_shuffle(u, pl, mesh=mesh, wire_dtype="int8",
+                               wire_dtype_bwd="int8").sum())(v))(x, plans))
+    assert grad_jaxpr.count("all_to_all") == 2, grad_jaxpr
+    assert grad_jaxpr.count("sort[") == 0, grad_jaxpr
+    ops = re.findall(r"(\w+)\[([\d,]+)\] = all_to_all", grad_jaxpr)
+    assert ops == [("i8", f"1,{n},{d + 4}")] * 2, ops
+
+    # default exact backward: the VJP collective stays f32
+    grad_exact = str(jax.make_jaxpr(lambda v, pl: jax.grad(
+        lambda u: plan_shuffle(u, pl, mesh=mesh,
+                               wire_dtype="int8").sum())(v))(x, plans))
+    ops = re.findall(r"(\w+)\[([\d,]+)\] = all_to_all", grad_exact)
+    assert ("f32", f"1,{n},{d}") in ops, ops
+
+
+WORKER_SUBMESH_QUANT_JAXPR = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import re
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import round as RD
+from repro.core.round import streamed_shuffle
+
+mesh = jax.make_mesh((8,), ("data",))
+coll = RD.StreamingAllToAll(mesh=mesh, num_clients=8, alpha=0.25,
+                            mode="balanced", submesh=True,
+                            wire_dtype="int8", wire_dtype_bwd="int8")
+n, d = 64, 3
+b = n // 8
+perm = coll.make_perm(jax.random.PRNGKey(0), n)
+prep = coll.prepare(perm, n)
+groups = len(coll.group_bounds(n))
+assert groups == 4
+
+x = jnp.zeros((n, d))
+fwd_jaxpr = str(jax.make_jaxpr(
+    lambda v, pr: streamed_shuffle(coll, pr, n, lambda g: v))(x, prep))
+assert fwd_jaxpr.count("all_to_all") == groups, fwd_jaxpr
+assert fwd_jaxpr.count("sort[") == 0, fwd_jaxpr
+# one collective per flush group, payload IN the wire dtype with the
+# scale lanes packed on: i8 (S=2, cap=4, d+4) — still zero slack rows
+ops = re.findall(r"(\w+)\[([\d,]+)\] = all_to_all", fwd_jaxpr)
+assert len(ops) == groups, fwd_jaxpr
+for dt, shape in ops:
+    assert dt == "i8", (dt, shape)
+    s_, cap_, d_ = map(int, shape.split(","))
+    assert (s_, cap_ * s_, d_) == (2, b, d + 4), shape
+print("submesh-quant-one-collective OK")
+
+back_jaxpr = str(jax.make_jaxpr(
+    lambda v, pr: coll.route_back(v, pr, n))(x, prep))
+assert back_jaxpr.count("all_to_all") == groups, back_jaxpr
+assert back_jaxpr.count("sort[") == 0, back_jaxpr
+ops = re.findall(r"(\w+)\[([\d,]+)\] = all_to_all", back_jaxpr)
+assert len(ops) == groups and all(dt == "i8" for dt, _ in ops), ops
+print("submesh-quant-route-back OK")
+"""
+
+
+@pytest.mark.parametrize("_", [0])
+def test_submesh_quantized_stream_keeps_collective_structure(_, tmp_path):
+    """Jaxpr inspection at 8 forced host devices: the int8-wire sub-mesh
+    stream keeps exactly ONE all_to_all per flush group on the forward
+    AND the quantized route-back, zero sorts, with the payload operand in
+    the wire dtype carrying d+4 columns (rows + packed scale lanes)."""
+    out = _run_worker(tmp_path, "worker_submesh_quant_jaxpr.py",
+                      WORKER_SUBMESH_QUANT_JAXPR, 420)
+    for token in ("submesh-quant-one-collective OK",
+                  "submesh-quant-route-back OK"):
+        assert token in out, out
